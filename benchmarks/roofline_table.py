@@ -1,0 +1,39 @@
+"""§Roofline: render the dry-run roofline table from experiments/raw."""
+
+import json
+import os
+
+RAW = os.path.join(os.path.dirname(__file__), "..", "experiments", "raw")
+
+
+def load_records(variant="baseline"):
+    recs = []
+    if not os.path.isdir(RAW):
+        return recs
+    for fn in sorted(os.listdir(RAW)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(RAW, fn)) as f:
+            r = json.load(f)
+        if r.get("variant", "baseline") == variant:
+            recs.append(r)
+    return recs
+
+
+def run():
+    rows = []
+    for r in load_records():
+        if r["mesh"] != "16x16":
+            continue
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        rows.append((name, bound * 1e6,
+                     f"dom={r['dominant']} comp={r['t_compute']*1e3:.1f}ms "
+                     f"mem={r['t_memory']*1e3:.1f}ms "
+                     f"coll={r['t_collective']*1e3:.1f}ms "
+                     f"useful={r['useful_flops_ratio']:.3f} "
+                     f"frac={r['roofline_fraction']*100:.2f}%"))
+    if not rows:
+        rows.append(("roofline_missing", 0.0,
+                     "run: python -m repro.launch.dryrun --all"))
+    return rows

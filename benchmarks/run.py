@@ -1,0 +1,48 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only t4,...]
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (roofline_table, t4_signal_latency,
+                            t5_attention_scaling, t8_lora_memory,
+                            t9_scenarios, t_cache_effectiveness,
+                            t_decision_overhead, t_halugate_cost)
+    suites = {
+        "t4": t4_signal_latency.run,
+        "t5": t5_attention_scaling.run,
+        "t8": t8_lora_memory.run,
+        "t9": t9_scenarios.run,
+        "decision": t_decision_overhead.run,
+        "cache": t_cache_effectiveness.run,
+        "halugate": t_halugate_cost.run,
+        "roofline": roofline_table.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, fn in suites.items():
+        if only and key not in only:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,24 @@
+"""Table 8: model memory — independent fine-tuned models vs LoRA adapters
+(ModernBERT-base-32k config, fp32 weights like the paper's 573MB figure)."""
+
+import jax
+import numpy as np
+
+from repro.classifiers.encoder import MODERNBERT_BASE_32K, adapter_params, \
+    init_encoder
+
+
+def run():
+    cfg = MODERNBERT_BASE_32K
+    shapes = jax.eval_shape(lambda: init_encoder(cfg, jax.random.PRNGKey(0)))
+    base = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    base_mb = base * 4 / 2**20
+    ad_mb = adapter_params(cfg) * 4 / 2**20
+    rows = []
+    for n in (1, 3, 6, 10):
+        indep = n * base_mb
+        lora = base_mb + n * ad_mb
+        rows.append((f"t8_lora_memory_n{n}", 0.0,
+                     f"independent={indep:.0f}MB lora={lora:.0f}MB "
+                     f"reduction={indep / lora:.2f}x"))
+    return rows

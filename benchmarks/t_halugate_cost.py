@@ -1,0 +1,35 @@
+"""§8.3 / Figure 16: HaluGate gated-cost curve — expected cost vs
+p_factual (Equation 27) + measured gating on a mixed workload."""
+
+from repro.classifiers.backend import HashBackend
+from repro.core.halugate import HaluGate
+
+WORKLOAD = [
+    ("what year did the berlin wall fall", True),
+    ("write a poem about autumn", False),
+    ("who invented the telephone", True),
+    ("brainstorm slogans for a bakery", False),
+    ("what is the population of japan", True),
+    ("compose a story with dragons", False),
+    ("how many moons does jupiter have", True),
+    ("imagine a world with two suns", False),
+]
+
+
+def run():
+    rows = []
+    for p in (0.0, 0.25, 0.5, 0.75, 1.0):
+        c = HaluGate.expected_cost(p, k_spans=1.5)
+        always = HaluGate.C_SENT + HaluGate.C_DET + 1.5 * HaluGate.C_NLI
+        rows.append((f"halugate_cost_p{p}", 0.0,
+                     f"expected={c:.2f} always_on={always:.2f} "
+                     f"saving={(1 - c / always) * 100:.0f}%"))
+    hg = HaluGate(HashBackend())
+    gated = 0
+    for q, factual in WORKLOAD:
+        res = hg.run(q, "context", "answer text here.")
+        gated += int(res.gated)
+    rows.append(("halugate_gate_rate", 0.0,
+                 f"gated_in={gated}/{len(WORKLOAD)} "
+                 f"(paper: 40-60% of queries skip verification)"))
+    return rows

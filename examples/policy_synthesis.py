@@ -1,0 +1,113 @@
+"""Agent-based policy synthesis (§6.8): natural-language routing specs ->
+DSL programs, with the three-level validator as the machine-readable
+feedback loop that an LLM coding agent would iterate against.
+
+The "agent" here is a deterministic rule-based synthesizer (no external LLM
+in this container) — the point demonstrated is the *interface*: a formally
+complete instruction set, a constrained generation target, and diagnostics
+(with QuickFix suggestions) that drive iterative repair of an intentionally
+buggy first draft.
+
+  PYTHONPATH=src python examples/policy_synthesis.py
+"""
+
+import re
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.dsl import compile_source
+from repro.core.router import SemanticRouter
+from repro.core.types import Message, Request
+
+SPECS = [
+    "route math queries to the math model, and block jailbreak attempts",
+    "send urgent requests to the fast model with caching",
+    "enforce PII filtering for healthcare queries routed to the on-prem "
+    "model",
+]
+
+_RULES = [
+    (r"math", 'SIGNAL domain math_d {{ mmlu_categories: ["math"] }}',
+     'domain("math_d")', "math-model"),
+    (r"healthcare|medical", 'SIGNAL domain health_d '
+     '{{ mmlu_categories: ["health"] }}', 'domain("health_d")',
+     "onprem-model"),
+    (r"urgent", 'SIGNAL keyword urgent_k {{ operator: "any", keywords: '
+     '["urgent", "asap"] }}', 'keyword("urgent_k")', "fast-model"),
+]
+
+
+def synthesize(spec: str, bug: bool = False) -> str:
+    """NL spec -> DSL draft.  ``bug=True`` injects the kind of mistakes a
+    first-pass generator makes, to exercise the repair loop."""
+    signals, routes = [], []
+    prio = 100
+    for pat, sig, ref, model in _RULES:
+        if re.search(pat, spec):
+            signals.append(sig.format())
+            routes.append(f'ROUTE r{len(routes)} {{\n  PRIORITY {prio}\n'
+                          f'  WHEN {ref}\n  MODEL "{model}"'
+                          + ("\n  PLUGIN c cache { threshold: 0.9 }"
+                             if "caching" in spec else "")
+                          + "\n}")
+            prio -= 10
+    if re.search(r"jailbreak|attack|block", spec):
+        signals.append('SIGNAL jailbreak jb '
+                       '{ method: "classifier", threshold: 0.6 }')
+        routes.insert(0, 'ROUTE block {\n  PRIORITY 1001\n'
+                         '  WHEN jailbreak("jb")\n  MODEL "blocked"\n'
+                         '  PLUGIN f fast_response '
+                         '{ message: "Blocked." }\n}')
+    if re.search(r"pii|filter", spec.lower()):
+        signals.append('SIGNAL pii strict { pii_types_allowed: [] }')
+        if routes:
+            routes[-1] = routes[-1].replace(
+                "\n}", '\n  PLUGIN p pii { pii_types_allowed: [] }\n}')
+    src = "\n".join(signals) + "\n\n" + "\n\n".join(routes) + \
+        '\n\nGLOBAL { default_model: "fast-model" }\n'
+    if bug:  # typo a signal reference + an out-of-range threshold
+        src = src.replace('domain("math_d")', 'domain("math_dd")') \
+                 .replace("threshold: 0.6", "threshold: 6.0")
+    return src
+
+
+def repair(src: str, diags) -> str:
+    """Apply validator QuickFixes — the mechanical half of the agent loop."""
+    for d in diags:
+        if d.level == 2 and d.quickfix:
+            m = re.search(r'references undefined signal \w+\("([^"]+)"\)',
+                          d.message)
+            if m:
+                src = src.replace(f'"{m.group(1)}"', f'"{d.quickfix}"')
+        if d.level == 3 and "outside [0, 1]" in d.message:
+            src = re.sub(r"threshold: \d+\.\d+",
+                         "threshold: 0.6", src, count=1)
+    return src
+
+
+def main():
+    for spec in SPECS:
+        print(f"\n=== spec: {spec!r}")
+        draft = synthesize(spec, bug=(spec is SPECS[0]))
+        cfg, diags = compile_source(draft, strict=False)
+        iteration = 0
+        while any(d.level in (2, 3) for d in diags) and iteration < 3:
+            print(f"  draft {iteration}: "
+                  f"{sum(1 for d in diags if d.level > 1)} diagnostics")
+            for d in diags:
+                print(f"    {d}")
+            draft = repair(draft, diags)
+            cfg, diags = compile_source(draft, strict=False)
+            iteration += 1
+        print(f"  converged after {iteration} repair iteration(s); "
+              f"{len(cfg.decisions)} decisions")
+        router = SemanticRouter(cfg)
+        probe = Request(messages=[Message(
+            "user", "solve the integral of x^2 (algebra)")])
+        _, out = router.route(probe)
+        print(f"  probe routed -> decision={out.decision} "
+              f"model={out.model}")
+
+
+if __name__ == "__main__":
+    main()

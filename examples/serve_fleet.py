@@ -1,0 +1,16 @@
+"""End-to-end serving driver (the paper-kind example): a heterogeneous
+fleet of assigned-architecture backends (DeepSeek-V2-MLA-MoE, GLM4, Qwen3,
+SmolLM — reduced configs) served in-process through the full semantic-router
+pipeline with batched requests, semantic caching, safety fast-responses and
+cost-aware selection.
+
+  PYTHONPATH=src python examples/serve_fleet.py --requests 24
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

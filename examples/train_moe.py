@@ -1,0 +1,56 @@
+"""Train a Qwen3-MoE-family model end to end: data pipeline -> shard_map EP
+MoE -> AdamW -> checkpoint/restart, with loss decreasing on the synthetic
+patterned stream.
+
+Default is a fast ~8M-parameter drill (CPU-friendly); --full trains the
+~100M-parameter variant for a few hundred steps (hours on CPU, minutes on
+one TPU host).
+
+  PYTHONPATH=src python examples/train_moe.py [--full] [--steps 200]
+"""
+
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.launch import train as T
+from repro.models.config import BlockSpec, LayerGroup, param_count
+
+
+def moe_100m():
+    base = get_config("qwen3-moe-235b-a22b")
+    return base.replace(
+        d_model=512, n_heads=8, n_kv_heads=4, head_dim=64, vocab_size=8192,
+        groups=(LayerGroup((BlockSpec("attn", "moe"),), 8),),
+        n_experts=16, moe_top_k=2, d_ff_expert=1024)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params instead of the fast drill")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/train_moe_ckpt")
+    args = ap.parse_args()
+
+    if args.full:
+        import repro.configs.qwen3_moe_235b_a22b as q
+        cfg = moe_100m()
+        q.CONFIG = cfg          # launcher resolves via registry
+        n = param_count(cfg)
+        print(f"training qwen3-moe-family model: {n/1e6:.1f}M params")
+        steps = args.steps or 300
+        T.main(["--arch", "qwen3-moe-235b-a22b", "--steps", str(steps),
+                "--batch", "8", "--seq", "256", "--ckpt-dir", args.ckpt_dir,
+                "--ckpt-every", "50", "--log-every", "10"])
+    else:
+        steps = args.steps or 120
+        T.main(["--arch", "qwen3-moe-235b-a22b", "--reduced",
+                "--steps", str(steps), "--batch", "8", "--seq", "128",
+                "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+                "--log-every", "20"])
+
+
+if __name__ == "__main__":
+    main()

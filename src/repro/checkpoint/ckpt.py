@@ -1,0 +1,112 @@
+"""Fault-tolerant checkpointing with elastic resharding.
+
+Layout:  <dir>/step_<n>/
+             manifest.msgpack     {paths, shapes, dtypes, meta, process_count}
+             shard_<p>.npz        per-host arrays (host-local shards)
+
+* save: each host writes its addressable shards; single-process writes all.
+  Writes go to a temp dir + atomic rename, so a crash mid-save never
+  corrupts the latest complete checkpoint.
+* restore: arrays are re-laid-out onto the CURRENT mesh/shardings
+  (jax.device_put against the target sharding) — restoring a 16x16
+  checkpoint onto 2x16x16 (elastic scale-up) or onto 1 host (tests) both
+  work from the same files.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    meta: Optional[Dict] = None) -> str:
+    flat, _ = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    manifest = {"step": step, "meta": meta or {},
+                "process_count": jax.process_count(),
+                "keys": {}}
+    arrays = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        manifest["keys"][key] = {"shape": list(arr.shape),
+                                 "dtype": str(arr.dtype)}
+        arrays[key.replace("/", "__")] = (
+            arr.astype(np.float32) if arr.dtype == jnp.bfloat16 else arr)
+        if arr.dtype == jnp.bfloat16:
+            manifest["keys"][key]["stored_as"] = "float32"
+    np.savez(os.path.join(tmp, f"shard_{jax.process_index()}.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, target: Any,
+                       shardings: Any = None) -> Any:
+    """``target``: pytree of arrays or ShapeDtypeStructs defining structure;
+    ``shardings``: optional matching pytree of NamedShardings for elastic
+    re-layout onto the current mesh."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = {}
+    for fn in os.listdir(path):
+        if fn.startswith("shard_") and fn.endswith(".npz"):
+            z = np.load(os.path.join(path, fn))
+            for k in z.files:
+                data[k.replace("__", "/")] = z[k]
+
+    flat_t, treedef = _flatten(target)
+    sh_flat = None
+    if shardings is not None:
+        sh_flat, _ = _flatten(shardings)
+    leaves = {}
+    for key, leaf in flat_t.items():
+        arr = data[key]
+        want_dtype = leaf.dtype
+        if manifest["keys"][key].get("stored_as") == "float32":
+            arr = arr.astype(jnp.bfloat16)
+        arr = arr.astype(want_dtype)
+        if sh_flat is not None and key in sh_flat:
+            leaves[key] = jax.device_put(arr, sh_flat[key])
+        else:
+            leaves[key] = jnp.asarray(arr)
+    # rebuild in treedef order
+    flat_pairs, _ = jax.tree_util.tree_flatten_with_path(target)
+    ordered = []
+    for pth, _leaf in flat_pairs:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in pth)
+        ordered.append(leaves[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered), manifest["meta"]

@@ -1,0 +1,1 @@
+from repro.classifiers.backend import ClassifierBackend, HashBackend, get_backend  # noqa: F401

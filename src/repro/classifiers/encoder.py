@@ -1,0 +1,373 @@
+"""MoM encoder substrate (§9, §11): one frozen bidirectional encoder +
+per-task LoRA adapters + task heads, with *batched* multi-task inference.
+
+Architecture = ModernBERT-class: RoPE, GeGLU, alternating global / local-128
+sliding-window attention (1 global : 2 local), padding masks, CLS pooling for
+sequence tasks, per-token states for PII tagging, pair encoding for NLI, and
+mean-pool + Matryoshka truncation for embeddings.
+
+The paper serves n tasks as n sequential forward passes (§9.3); this module
+additionally implements the beyond-paper batched mode: tasks fold into the
+batch dimension and per-row adapters apply via one fused computation (the
+``kernels/multi_lora`` BGMV on TPU; a one-hot einsum under XLA elsewhere) —
+so the frozen base runs once per *batch* instead of once per *task*.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.classifiers import tokenizer as TOK
+from repro.classifiers.backend import (ClassifierBackend, DOMAIN_LABELS,
+                                       PII_LABELS, HashBackend)
+from repro.models.layers import dense_init, rope_tables, apply_rope, rms_norm
+
+TASKS = ("domain", "jailbreak", "fact_check", "user_feedback", "modality",
+         "nli", "detector")
+TASK_CLASSES = {"domain": len(DOMAIN_LABELS), "jailbreak": 3,
+                "fact_check": 2, "user_feedback": 5, "modality": 3,
+                "nli": 3, "detector": 2}
+TASK_LABELS = {
+    "domain": DOMAIN_LABELS,
+    "jailbreak": ["BENIGN", "INJECTION", "JAILBREAK"],
+    "fact_check": ["NO_FACT_CHECK", "NEEDS_FACT_CHECK"],
+    "user_feedback": ["satisfied", "dissatisfied", "clarification",
+                      "alternative", "none"],
+    "modality": ["autoregressive", "diffusion", "both"],
+    "nli": ["ENTAILMENT", "CONTRADICTION", "NEUTRAL"],
+    "detector": ["SUPPORTED", "HALLUCINATED"],
+}
+PII_TAGS = ["O"] + [f"B-{l}" for l in PII_LABELS] + \
+    [f"I-{l}" for l in PII_LABELS]
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    n_layers: int = 4
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 256
+    vocab: int = TOK.VOCAB
+    max_len: int = 128
+    local_window: int = 128
+    global_every: int = 3           # ModernBERT: 1 global : 2 local
+    rope_theta_global: float = 160_000.0
+    rope_theta_local: float = 10_000.0
+    lora_rank: int = 16
+    embed_dim: int = 128            # matryoshka base dim
+
+
+MODERNBERT_BASE_32K = EncoderConfig(
+    n_layers=22, d_model=768, n_heads=12, d_ff=1152, max_len=32768,
+    lora_rank=32, embed_dim=768)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_encoder(cfg: EncoderConfig, key) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    d, H = cfg.d_model, cfg.n_heads
+    layers = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[i], 7)
+        layers.append({
+            "norm1": jnp.ones((d,), jnp.float32),
+            "wq": dense_init(kk[0], (d, d), jnp.float32),
+            "wk": dense_init(kk[1], (d, d), jnp.float32),
+            "wv": dense_init(kk[2], (d, d), jnp.float32),
+            "wo": dense_init(kk[3], (d, d), jnp.float32),
+            "norm2": jnp.ones((d,), jnp.float32),
+            "w_in": dense_init(kk[4], (d, 2 * cfg.d_ff), jnp.float32),
+            "w_out": dense_init(kk[5], (cfg.d_ff, d), jnp.float32),
+        })
+    return {
+        "embed": dense_init(ks[-1], (cfg.vocab, d), jnp.float32, scale=0.02),
+        "seg_embed": dense_init(ks[-2], (2, d), jnp.float32, scale=0.02),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+
+
+def init_adapters(cfg: EncoderConfig, key, tasks: Sequence[str] = TASKS
+                  ) -> dict:
+    """Per-task LoRA (q and v projections, every layer) + task heads."""
+    out = {}
+    d, r, L = cfg.d_model, cfg.lora_rank, cfg.n_layers
+    for t in tasks:
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        out[t] = {
+            "a_q": jax.random.normal(k1, (L, d, r)) * 0.02,
+            "b_q": jnp.zeros((L, r, d)),
+            "a_v": jax.random.normal(k2, (L, d, r)) * 0.02,
+            "b_v": jnp.zeros((L, r, d)),
+            "head": dense_init(k3, (d, TASK_CLASSES[t]), jnp.float32,
+                               scale=0.02),
+        }
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    out["pii"] = {
+        "a_q": jax.random.normal(k1, (L, d, r)) * 0.02,
+        "b_q": jnp.zeros((L, r, d)),
+        "a_v": jax.random.normal(k2, (L, d, r)) * 0.02,
+        "b_v": jnp.zeros((L, r, d)),
+        "head": dense_init(k3, (d, len(PII_TAGS)), jnp.float32, scale=0.02),
+    }
+    return out
+
+
+def adapter_params(cfg: EncoderConfig) -> int:
+    return cfg.n_layers * 4 * cfg.d_model * cfg.lora_rank
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _attention(cfg, lp, x, lens, layer_idx, lora=None, row_task=None):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    is_global = (layer_idx % cfg.global_every) == 0
+    theta = cfg.rope_theta_global if is_global else cfg.rope_theta_local
+
+    h = rms_norm(x, lp["norm1"], 1e-6)
+
+    def proj(w, name):
+        y = h @ w
+        if lora is not None and name in ("q", "v"):
+            a = lora[f"a_{name}"]                    # (d,r) or (T,d,r)
+            b = lora[f"b_{name}"]
+            if row_task is None:
+                y = y + (h @ a) @ b
+            else:  # batched multi-task: per-row adapter via one-hot einsum
+                oh = row_task                        # (B, T)
+                y = y + jnp.einsum("bsd,tdr,tro,bt->bso", h, a, b, oh)
+        return y.reshape(B, S, H, hd)
+
+    q = proj(lp["wq"], "q")
+    k = proj(lp["wk"], "k")
+    v = proj(lp["wv"], "v")
+    rope = rope_tables(jnp.arange(S), hd, theta)
+    q = apply_rope(q, *rope)
+    k = apply_rope(k, *rope)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    iq = jnp.arange(S)[:, None]
+    ik = jnp.arange(S)[None, :]
+    mask = ik[None] < lens[:, None, None]                      # padding
+    if not is_global and cfg.local_window > 0:
+        w = cfg.local_window
+        mask = mask & (jnp.abs(iq - ik) < w)[None]
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(B, S, d)
+    return x + out @ lp["wo"]
+
+
+def encoder_forward(cfg: EncoderConfig, params, ids, lens, seg=None,
+                    lora=None, row_task=None, early_exit: int = 0):
+    """ids (B,S) -> hidden states (B,S,d).  ``lora``: one adapter set
+    (arrays (L,d,r)) or stacked-task set (arrays (T,L,d,r) wh) with
+    ``row_task`` one-hot (B,T).  ``early_exit``: stop after k layers
+    (Matryoshka layer dimension)."""
+    x = params["embed"][ids]
+    if seg is not None:
+        x = x + params["seg_embed"][seg]
+    n = early_exit or cfg.n_layers
+    for i, lp in enumerate(params["layers"][:n]):
+        ll = None
+        if lora is not None:
+            if row_task is not None:     # stacked (T, L, d, r) -> (T, d, r)
+                ll = {k: lora[k][:, i] for k in ("a_q", "b_q", "a_v", "b_v")}
+            else:                        # single task (L, d, r) -> (d, r)
+                ll = {k: lora[k][i] for k in ("a_q", "b_q", "a_v", "b_v")}
+        x = _attention(cfg, lp, x, lens, i, lora=ll, row_task=row_task)
+        h = rms_norm(x, lp["norm2"], 1e-6)
+        gate, up = jnp.split(h @ lp["w_in"], 2, axis=-1)
+        x = x + (jax.nn.gelu(gate) * up) @ lp["w_out"]
+    return rms_norm(x, params["final_norm"], 1e-6)
+
+
+def cls_pool(hidden):
+    return hidden[:, 0, :]
+
+
+def mean_pool(hidden, lens):
+    mask = (jnp.arange(hidden.shape[1])[None] < lens[:, None])[..., None]
+    s = (hidden * mask).sum(1)
+    return s / jnp.maximum(mask.sum(1), 1)
+
+
+def matryoshka(emb, dim: int):
+    """Dimension-truncated embedding, re-normalized (§11.6)."""
+    e = emb[:, :dim]
+    return e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# multi-task batched inference (the §9.3 hot path, fused)
+# ---------------------------------------------------------------------------
+
+def _lora_layer_fix(lora, i):
+    return {k: lora[k][:, i] for k in ("a_q", "b_q", "a_v", "b_v")}
+
+
+def multitask_logits(cfg: EncoderConfig, params, adapters: dict,
+                     tasks: Sequence[str], ids, lens):
+    """Run |tasks| classifications for a batch of B texts in ONE batched
+    forward of B*T rows with per-row LoRA.  Returns {task: (B, C_t)}."""
+    B = ids.shape[0]
+    T = len(tasks)
+    ids_rep = jnp.tile(ids, (T, 1))
+    lens_rep = jnp.tile(lens, (T,))
+    row_task = jnp.repeat(jnp.arange(T), B)
+    onehot = jax.nn.one_hot(row_task, T)
+    stacked = {k: jnp.stack([adapters[t][k] for t in tasks])
+               for k in ("a_q", "b_q", "a_v", "b_v")}
+    hidden = encoder_forward(cfg, params, ids_rep, lens_rep,
+                             lora=stacked, row_task=onehot)
+    pooled = cls_pool(hidden)                       # (B*T, d)
+    out = {}
+    for ti, t in enumerate(tasks):
+        rows = pooled[ti * B:(ti + 1) * B]
+        out[t] = rows @ adapters[t]["head"]
+    return out
+
+
+def single_task_logits(cfg, params, adapters, task, ids, lens):
+    """Paper-faithful mode: one forward pass per task (§9.3 baseline)."""
+    lora = {k: adapters[task][k] for k in ("a_q", "b_q", "a_v", "b_v")}
+    hidden = encoder_forward(cfg, params, ids, lens, lora=lora)
+    if task == "pii":
+        return hidden @ adapters["pii"]["head"]     # (B, S, tags)
+    return cls_pool(hidden) @ adapters[task]["head"]
+
+
+# ---------------------------------------------------------------------------
+# training utility (adapters only; base frozen)
+# ---------------------------------------------------------------------------
+
+def train_adapter(cfg, params, adapters, task, ids, lens, labels, *,
+                  steps=100, lr=3e-3, seed=0):
+    """Cross-entropy on the task head + LoRA (frozen base).  Returns new
+    adapter dict for the task."""
+    sub = adapters[task]
+
+    def loss_fn(sub):
+        lora = {k: sub[k] for k in ("a_q", "b_q", "a_v", "b_v")}
+        hidden = encoder_forward(cfg, params, ids, lens, lora=lora)
+        logits = cls_pool(hidden) @ sub["head"]
+        ll = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(ll, labels[:, None], 1).mean()
+
+    vg = jax.jit(jax.value_and_grad(loss_fn))
+    m = jax.tree.map(jnp.zeros_like, sub)
+    for step in range(steps):
+        loss, g = vg(sub)
+        m = jax.tree.map(lambda m_, g_: 0.9 * m_ + g_, m, g)
+        sub = jax.tree.map(lambda p, m_: p - lr * m_, sub, m)
+    return sub, float(loss)
+
+
+# ---------------------------------------------------------------------------
+# backend protocol implementation
+# ---------------------------------------------------------------------------
+
+class EncoderBackend(ClassifierBackend):
+    """ClassifierBackend over the JAX encoder.  Tasks without trained
+    adapters delegate to HashBackend labels (the deterministic tier), so the
+    system is usable before/without adapter training."""
+
+    name = "encoder"
+
+    def __init__(self, cfg: EncoderConfig, params, adapters,
+                 trained: Optional[set] = None, batched: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.adapters = adapters
+        self.trained = trained or set()
+        self.batched = batched
+        self._fallback = HashBackend()
+        self._fwd = jax.jit(functools.partial(encoder_forward, cfg))
+
+    @classmethod
+    def default(cls, cfg: Optional[EncoderConfig] = None, seed: int = 0):
+        cfg = cfg or EncoderConfig()
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        return cls(cfg, init_encoder(cfg, k1), init_adapters(cfg, k2))
+
+    # -- embeddings ---------------------------------------------------------
+    def embed(self, texts, dim: Optional[int] = None,
+              early_exit: int = 0) -> np.ndarray:
+        ids, lens = TOK.encode_batch(list(texts), self.cfg.max_len)
+        hidden = self._fwd(self.params, jnp.asarray(ids), jnp.asarray(lens))
+        emb = mean_pool(hidden, jnp.asarray(lens))
+        emb = matryoshka(emb, dim or self.cfg.embed_dim)
+        return np.asarray(emb, np.float32)
+
+    # -- sequence classification ------------------------------------------------
+    def classify(self, task, texts):
+        if task not in self.trained:
+            return self._fallback.classify(task, texts)
+        ids, lens = TOK.encode_batch(list(texts), self.cfg.max_len)
+        logits = single_task_logits(self.cfg, self.params, self.adapters,
+                                    task, jnp.asarray(ids), jnp.asarray(lens))
+        probs = np.asarray(jax.nn.softmax(logits), np.float32)
+        labels = [TASK_LABELS[task][int(i)] for i in probs.argmax(1)]
+        return labels, probs
+
+    def classify_all(self, tasks, texts):
+        """Batched multi-task path (beyond-paper fusion)."""
+        ids, lens = TOK.encode_batch(list(texts), self.cfg.max_len)
+        logits = multitask_logits(self.cfg, self.params, self.adapters,
+                                  tasks, jnp.asarray(ids), jnp.asarray(lens))
+        out = {}
+        for t in tasks:
+            probs = np.asarray(jax.nn.softmax(logits[t]), np.float32)
+            out[t] = ([TASK_LABELS[t][int(i)] for i in probs.argmax(1)],
+                      probs)
+        return out
+
+    # -- token classification (PII) ------------------------------------------------
+    def token_classify(self, texts):
+        if "pii" not in self.trained:
+            return self._fallback.token_classify(texts)
+        ids, lens = TOK.encode_batch(list(texts), self.cfg.max_len)
+        logits = single_task_logits(self.cfg, self.params, self.adapters,
+                                    "pii", jnp.asarray(ids), jnp.asarray(lens))
+        probs = np.asarray(jax.nn.softmax(logits), np.float32)
+        out = []
+        for i, t in enumerate(texts):
+            spans = []
+            tags = probs[i].argmax(-1)
+            for j in range(1, int(lens[i]) - 1):
+                tag = PII_TAGS[int(tags[j])]
+                if tag.startswith("B-"):
+                    spans.append((j, j + 1, tag[2:],
+                                  float(probs[i, j].max())))
+            out.append(spans)
+        return out
+
+    # -- NLI cross-encoder ---------------------------------------------------------
+    def nli(self, claims, evidences):
+        rows = [TOK.encode_pair(c, e, self.cfg.max_len)
+                for c, e in zip(claims, evidences)]
+        ids = jnp.asarray(np.stack([r[0] for r in rows]))
+        seg = jnp.asarray(np.stack([r[1] for r in rows]))
+        lens = jnp.asarray(np.asarray([r[2] for r in rows], np.int32))
+        lora = {k: self.adapters["nli"][k]
+                for k in ("a_q", "b_q", "a_v", "b_v")}
+        hidden = encoder_forward(self.cfg, self.params, ids, lens, seg=seg,
+                                 lora=lora)
+        logits = cls_pool(hidden) @ self.adapters["nli"]["head"]
+        probs = np.asarray(jax.nn.softmax(logits), np.float32)
+        return [TASK_LABELS["nli"][int(i)] for i in probs.argmax(1)], probs

@@ -1,0 +1,290 @@
+"""Decision engine (paper §4): recursive Boolean rule nodes over signal
+conditions, crisp + fuzzy evaluation, priority/confidence selection, the
+Prop.-1 minterm constructor, logic-synthesis analyses (coverage, conflicts,
+subsumption), and a vectorized JAX batch evaluator (the "symbolic MoE gate"
+executed on-device for batched serving).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.types import Decision, SignalKey, SignalResult
+
+
+# ---------------------------------------------------------------------------
+# rule nodes (Definition 5)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RuleNode:
+    op: str                                   # "leaf" | "and" | "or" | "not"
+    key: Optional[SignalKey] = None           # for leaf
+    children: Tuple["RuleNode", ...] = ()
+
+    def __post_init__(self):
+        assert self.op in ("leaf", "and", "or", "not"), self.op
+        if self.op == "leaf":
+            assert self.key is not None
+        if self.op == "not":
+            assert len(self.children) == 1, "not is strictly unary"
+
+
+def leaf(type_: str, name: str) -> RuleNode:
+    return RuleNode("leaf", key=SignalKey(type_, name))
+
+
+def and_(*children: RuleNode) -> RuleNode:
+    return RuleNode("and", children=tuple(children))
+
+
+def or_(*children: RuleNode) -> RuleNode:
+    return RuleNode("or", children=tuple(children))
+
+
+def not_(child: RuleNode) -> RuleNode:
+    return RuleNode("not", children=(child,))
+
+
+def nor_(*children: RuleNode) -> RuleNode:
+    return not_(or_(*children))
+
+
+def nand_(*children: RuleNode) -> RuleNode:
+    return not_(and_(*children))
+
+
+def xor_(a: RuleNode, b: RuleNode) -> RuleNode:
+    return or_(and_(a, not_(b)), and_(not_(a), b))
+
+
+def leaf_keys(node: RuleNode) -> List[SignalKey]:
+    if node.op == "leaf":
+        return [node.key]
+    out: List[SignalKey] = []
+    for c in node.children:
+        out.extend(leaf_keys(c))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# crisp evaluation (Equation 6)
+# ---------------------------------------------------------------------------
+
+def eval_crisp(node: RuleNode, s: SignalResult) -> bool:
+    if node.op == "leaf":
+        return s.matched(node.key.type, node.key.name)
+    if node.op == "and":
+        return all(eval_crisp(c, s) for c in node.children)
+    if node.op == "or":
+        return any(eval_crisp(c, s) for c in node.children)
+    return not eval_crisp(node.children[0], s)
+
+
+# ---------------------------------------------------------------------------
+# fuzzy evaluation (Definition 6): (min, max, 1-x) over confidences
+# ---------------------------------------------------------------------------
+
+def eval_fuzzy(node: RuleNode, s: SignalResult) -> float:
+    if node.op == "leaf":
+        return s.confidence(node.key.type, node.key.name)
+    if node.op == "and":
+        return min(eval_fuzzy(c, s) for c in node.children)
+    if node.op == "or":
+        return max(eval_fuzzy(c, s) for c in node.children)
+    return 1.0 - eval_fuzzy(node.children[0], s)
+
+
+# ---------------------------------------------------------------------------
+# confidence (Equation 7): mean confidence over satisfied leaf conditions
+# ---------------------------------------------------------------------------
+
+def confidence(node: RuleNode, s: SignalResult) -> float:
+    sat = [s.confidence(k.type, k.name) for k in leaf_keys(node)
+           if s.matched(k.type, k.name)]
+    return sum(sat) / len(sat) if sat else 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EngineResult:
+    decision: Optional[Decision]
+    confidence: float
+    matched: List[Tuple[str, float]] = field(default_factory=list)
+
+
+class DecisionEngine:
+    def __init__(self, decisions: Sequence[Decision],
+                 strategy: str = "priority", fuzzy: bool = False,
+                 fuzzy_threshold: float = 0.5):
+        assert strategy in ("priority", "confidence")
+        self.decisions = list(decisions)
+        self.strategy = strategy
+        self.fuzzy = fuzzy
+        self.fuzzy_threshold = fuzzy_threshold
+
+    def evaluate(self, s: SignalResult) -> EngineResult:
+        matched: List[Tuple[Decision, float]] = []
+        for d in self.decisions:
+            if self.fuzzy:
+                score = eval_fuzzy(d.rule, s)
+                if score >= self.fuzzy_threshold:
+                    matched.append((d, score))
+            else:
+                if eval_crisp(d.rule, s):
+                    matched.append((d, confidence(d.rule, s)))
+        if not matched:
+            return EngineResult(None, 0.0)
+        if self.strategy == "priority":
+            best = max(enumerate(matched),
+                       key=lambda t: (t[1][0].priority, -t[0]))[1]
+        else:
+            best = max(matched, key=lambda t: t[1])
+        return EngineResult(best[0], best[1],
+                            [(d.name, c) for d, c in matched])
+
+
+# ---------------------------------------------------------------------------
+# Proposition 1: minterm construction — any f: {0,1}^N -> {0,1}
+# ---------------------------------------------------------------------------
+
+def from_truth_table(keys: Sequence[SignalKey], table: Sequence[int]
+                     ) -> RuleNode:
+    """Build a rule node realizing an arbitrary Boolean function given as a
+    truth table over ``keys`` (row i = assignment binary(i), MSB first)."""
+    n = len(keys)
+    assert len(table) == 2 ** n
+    minterms = []
+    for row, val in enumerate(table):
+        if not val:
+            continue
+        lits = []
+        for i, k in enumerate(keys):
+            bit = (row >> (n - 1 - i)) & 1
+            lit = leaf(k.type, k.name)
+            lits.append(lit if bit else not_(lit))
+        minterms.append(and_(*lits) if len(lits) > 1 else lits[0])
+    if not minterms:
+        # constant false: AND(x, NOT(x)) over the first key
+        x = leaf(keys[0].type, keys[0].name)
+        return and_(x, not_(x))
+    return or_(*minterms) if len(minterms) > 1 else minterms[0]
+
+
+# ---------------------------------------------------------------------------
+# logic-synthesis analyses (§4.5): coverage / conflicts / subsumption
+# ---------------------------------------------------------------------------
+
+def _eval_assignment(node: RuleNode, assign: Dict[str, bool]) -> bool:
+    if node.op == "leaf":
+        return assign.get(str(node.key), False)
+    if node.op == "and":
+        return all(_eval_assignment(c, assign) for c in node.children)
+    if node.op == "or":
+        return any(_eval_assignment(c, assign) for c in node.children)
+    return not _eval_assignment(node.children[0], assign)
+
+
+def coverage_analysis(decisions: Sequence[Decision], max_vars: int = 16):
+    """Exhaustively checks the signal space {0,1}^N for dead zones (no
+    decision matches) and conflicts (multiple decisions with equal priority
+    match).  N is capped for tractability."""
+    keys = sorted({str(k) for d in decisions for k in leaf_keys(d.rule)})
+    if len(keys) > max_vars:
+        raise ValueError(f"coverage analysis capped at {max_vars} vars, "
+                         f"got {len(keys)}")
+    dead, conflicts = [], []
+    for bits in itertools.product([False, True], repeat=len(keys)):
+        assign = dict(zip(keys, bits))
+        hits = [d for d in decisions if _eval_assignment(d.rule, assign)]
+        if not hits:
+            dead.append(assign)
+        else:
+            top = max(h.priority for h in hits)
+            tied = [h for h in hits if h.priority == top]
+            if len(tied) > 1:
+                pools = {tuple(sorted(m.name for m in h.model_refs))
+                         for h in tied}
+                if len(pools) > 1:
+                    conflicts.append((assign, [h.name for h in tied]))
+    return {"n_vars": len(keys), "dead_zones": len(dead),
+            "conflicts": conflicts, "dead_examples": dead[:4]}
+
+
+def subsumes(a: RuleNode, b: RuleNode, max_vars: int = 14) -> bool:
+    """True if a => b for every assignment (b is redundant given a's match
+    set when pools are equal) — Espresso-style containment check."""
+    keys = sorted({str(k) for k in leaf_keys(a) + leaf_keys(b)})
+    if len(keys) > max_vars:
+        return False
+    for bits in itertools.product([False, True], repeat=len(keys)):
+        assign = dict(zip(keys, bits))
+        if _eval_assignment(a, assign) and not _eval_assignment(b, assign):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# JAX batch evaluator: decision set -> jit'd gate over (B, N) signal batches
+# ---------------------------------------------------------------------------
+
+def build_batch_evaluator(decisions: Sequence[Decision]):
+    """Compile the decision set to a jit'd function
+    (match (B,N) f32, conf (B,N) f32) -> (decision_idx (B,), conf (B,))
+    implementing Algorithm 1 with priority strategy — the symbolic-MoE gate
+    as an on-device batched op."""
+    import jax
+    import jax.numpy as jnp
+
+    keys = sorted({str(k) for d in decisions for k in leaf_keys(d.rule)})
+    key_idx = {k: i for i, k in enumerate(keys)}
+
+    def node_fn(node, m):
+        if node.op == "leaf":
+            return m[:, key_idx[str(node.key)]]
+        if node.op == "and":
+            out = node_fn(node.children[0], m)
+            for c in node.children[1:]:
+                out = out * node_fn(c, m)
+            return out
+        if node.op == "or":
+            out = node_fn(node.children[0], m)
+            for c in node.children[1:]:
+                out = jnp.maximum(out, node_fn(c, m))
+            return out
+        return 1.0 - node_fn(node.children[0], m)
+
+    leaf_masks = []
+    for d in decisions:
+        mask = jnp.zeros((len(keys),))
+        for k in leaf_keys(d.rule):
+            mask = mask.at[key_idx[str(k)]].set(1.0)
+        leaf_masks.append(mask)
+    leaf_masks = jnp.stack(leaf_masks) if decisions else jnp.zeros((0, len(keys)))
+    priorities = jnp.asarray([d.priority for d in decisions], jnp.float32)
+    order = jnp.arange(len(decisions), dtype=jnp.float32)
+
+    @jax.jit
+    def evaluate(match, conf):
+        B = match.shape[0]
+        gates = jnp.stack([node_fn(d.rule, match) for d in decisions],
+                          axis=1) if decisions else jnp.zeros((B, 0))
+        sat = match[:, None, :] * leaf_masks[None]          # (B,D,N)
+        csum = (conf[:, None, :] * sat).sum(-1)
+        cnum = jnp.maximum(sat.sum(-1), 1.0)
+        dconf = csum / cnum                                  # (B,D)
+        score = gates * (1e6 + priorities[None] * 1e3 - order[None])
+        idx = jnp.argmax(score, axis=1)
+        any_match = gates.max(axis=1) > 0
+        idx = jnp.where(any_match, idx, -1)
+        c = jnp.where(any_match,
+                      jnp.take_along_axis(dconf, jnp.maximum(idx, 0)[:, None],
+                                          axis=1)[:, 0], 0.0)
+        return idx, c
+
+    return evaluate, keys

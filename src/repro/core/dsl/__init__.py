@@ -1,0 +1,5 @@
+from repro.core.dsl.parser import parse  # noqa: F401
+from repro.core.dsl.compiler import compile_program, compile_source  # noqa: F401
+from repro.core.dsl.decompiler import decompile  # noqa: F401
+from repro.core.dsl.emit import emit_yaml, emit_crd, emit_helm  # noqa: F401
+from repro.core.dsl.validate import validate  # noqa: F401

@@ -1,0 +1,100 @@
+"""DSL -> RouterConfig compilation (§6.4 stage 3)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+from repro.core.decision import RuleNode, and_, leaf, not_, or_
+from repro.core.dsl.ast_nodes import (BoolAnd, BoolExpr, BoolNot, BoolOr,
+                                      Program, SignalRefExpr)
+from repro.core.dsl.parser import parse
+from repro.core.dsl.validate import validate
+from repro.core.types import (Decision, Endpoint, ModelProfile, ModelRef,
+                              RouterConfig)
+
+
+def _expr_to_rule(e: BoolExpr) -> RuleNode:
+    if isinstance(e, SignalRefExpr):
+        return leaf(e.type, e.name)
+    if isinstance(e, BoolAnd):
+        return and_(*[_expr_to_rule(c) for c in e.children])
+    if isinstance(e, BoolOr):
+        return or_(*[_expr_to_rule(c) for c in e.children])
+    if isinstance(e, BoolNot):
+        return not_(_expr_to_rule(e.child))
+    raise TypeError(e)
+
+
+def compile_program(prog: Program) -> RouterConfig:
+    cfg = RouterConfig()
+    for s in prog.signals:
+        cfg.signals.setdefault(s.type, {})[s.name] = dict(s.config)
+    templates = {p.name: (p.type, dict(p.config)) for p in prog.plugins}
+    cfg.plugin_templates = {}
+
+    for r in prog.routes:
+        plugins: Dict[str, Dict[str, Any]] = {}
+        for ref in r.plugin_refs:
+            if ref in templates:
+                ptype, pcfg = templates[ref]
+                plugins[ptype] = dict(pcfg)
+        for ip in r.inline_plugins:   # route-local fields override templates
+            base = dict(templates.get(ip.name, (ip.type, {}))[1])
+            base.update(ip.config)
+            plugins[ip.type] = base
+        refs = [ModelRef(m.name,
+                         reasoning=bool(m.params.get("reasoning", False)),
+                         effort=str(m.params.get("effort", "medium")),
+                         lora_adapter=m.params.get("lora"),
+                         weight=float(m.params.get("weight", 1.0)))
+                for m in r.models]
+        cfg.decisions.append(Decision(
+            name=r.name,
+            rule=_expr_to_rule(r.when) if r.when else leaf("keyword",
+                                                           "__never__"),
+            model_refs=refs, priority=r.priority, plugins=plugins,
+            algorithm=r.algorithm or "static",
+            algorithm_config=dict(r.algorithm_config),
+            description=r.description))
+
+    for b in prog.backends:
+        c = b.config
+        if b.type in ("embedding", "cache", "memory"):
+            # infra bindings, not endpoints
+            cfg.plugin_templates.setdefault("_infra", {})[b.name] = \
+                dict(c, kind=b.type)
+            continue
+        cfg.endpoints.append(Endpoint(
+            name=b.name, provider=b.type,
+            address=str(c.get("address", "127.0.0.1")),
+            port=int(c.get("port", 8000)),
+            weight=float(c.get("weight", 1.0)),
+            models=list(c.get("models", [])),
+            auth=str(c.get("auth", "passthrough")),
+            auth_config={k: str(v) for k, v in c.get("auth_config",
+                                                     {}).items()}))
+
+    if prog.global_:
+        g = prog.global_.config
+        cfg.default_model = str(g.get("default_model", ""))
+        cfg.strategy = str(g.get("strategy", "priority"))
+        cfg.embedding_backend = str(g.get("embedding_backend", "hash"))
+        for mname, prof in g.get("model_profiles", {}).items():
+            if isinstance(prof, dict):
+                cfg.model_profiles[mname] = ModelProfile(
+                    mname,
+                    cost_per_mtok=float(prof.get("cost_per_mtok", 1.0)),
+                    quality=float(prof.get("quality", 0.5)),
+                    latency_ms=float(prof.get("latency_ms", 200.0)),
+                    arch=prof.get("arch"))
+    return cfg
+
+
+def compile_source(src: str, strict: bool = True):
+    """Returns (RouterConfig, diagnostics).  strict raises on Level-1."""
+    prog = parse(src)
+    diags = list(prog.diagnostics) + validate(prog)
+    if strict and any(d.level == 1 for d in diags):
+        raise ValueError("DSL compile failed:\n" +
+                         "\n".join(str(d) for d in diags if d.level == 1))
+    return compile_program(prog), diags

@@ -1,0 +1,103 @@
+"""Three-level validation (§6.7): syntax diagnostics come from the parser;
+this module adds Level-2 reference resolution (with fuzzy-matched QuickFix
+suggestions) and Level-3 semantic constraints."""
+
+from __future__ import annotations
+
+import difflib
+from typing import List
+
+from repro.core.dsl.ast_nodes import (BoolAnd, BoolNot, BoolOr, Diagnostic,
+                                      Program, SignalRefExpr)
+from repro.core.types import SIGNAL_TYPES
+
+KNOWN_ALGORITHMS = ("static", "elo", "routerdc", "hybrid", "automix", "knn",
+                    "kmeans", "svm", "mlp", "thompson", "gmt", "latency",
+                    "remom", "confidence")
+KNOWN_PLUGIN_TYPES = ("cache", "fast_response", "system_prompt", "headers",
+                      "modality", "memory", "rag", "halugate", "pii")
+KNOWN_BACKENDS = ("vllm", "openai", "anthropic", "azure", "bedrock",
+                  "gemini", "vertex", "ollama", "embedding", "cache",
+                  "memory")
+
+
+def _refs(expr):
+    if isinstance(expr, SignalRefExpr):
+        yield expr
+    elif isinstance(expr, (BoolAnd, BoolOr)):
+        for c in expr.children:
+            yield from _refs(c)
+    elif isinstance(expr, BoolNot):
+        yield from _refs(expr.child)
+
+
+def validate(prog: Program) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    declared = {(s.type, s.name) for s in prog.signals}
+    declared_names = {s.name for s in prog.signals}
+    template_names = {p.name for p in prog.plugins}
+
+    # ---- Level 2: reference resolution ------------------------------------
+    for r in prog.routes:
+        if r.when is not None:
+            for ref in _refs(r.when):
+                if (ref.type, ref.name) not in declared:
+                    sugg = difflib.get_close_matches(
+                        ref.name, list(declared_names), n=1, cutoff=0.6)
+                    out.append(Diagnostic(
+                        2, f"route {r.name!r}: WHEN references undefined "
+                           f"signal {ref.type}(\"{ref.name}\")",
+                        ref.pos.line, ref.pos.col,
+                        quickfix=sugg[0] if sugg else None))
+        for pref in r.plugin_refs:
+            if pref not in template_names:
+                sugg = difflib.get_close_matches(pref, list(template_names),
+                                                 n=1, cutoff=0.6)
+                out.append(Diagnostic(
+                    2, f"route {r.name!r}: PLUGIN reference {pref!r} has no "
+                       f"matching template", r.pos.line, r.pos.col,
+                    quickfix=sugg[0] if sugg else None))
+
+    # ---- Level 3: semantic constraints --------------------------------------
+    for s in prog.signals:
+        if s.type not in SIGNAL_TYPES:
+            sugg = difflib.get_close_matches(s.type, SIGNAL_TYPES, n=1)
+            out.append(Diagnostic(3, f"unknown signal type {s.type!r}",
+                                  s.pos.line, s.pos.col,
+                                  quickfix=sugg[0] if sugg else None))
+        thr = s.config.get("threshold")
+        if thr is not None and not (0.0 <= float(thr) <= 1.0):
+            out.append(Diagnostic(
+                3, f"signal {s.name!r}: threshold {thr} outside [0, 1]",
+                s.pos.line, s.pos.col))
+    for r in prog.routes:
+        if r.priority < 0:
+            out.append(Diagnostic(3, f"route {r.name!r}: negative priority",
+                                  r.pos.line, r.pos.col))
+        if r.algorithm and r.algorithm not in KNOWN_ALGORITHMS:
+            sugg = difflib.get_close_matches(r.algorithm, KNOWN_ALGORITHMS,
+                                             n=1)
+            out.append(Diagnostic(
+                3, f"route {r.name!r}: unknown algorithm {r.algorithm!r}",
+                r.pos.line, r.pos.col,
+                quickfix=sugg[0] if sugg else None))
+        if not r.models:
+            out.append(Diagnostic(3, f"route {r.name!r}: no MODEL declared",
+                                  r.pos.line, r.pos.col))
+    for p in prog.plugins:
+        if p.type not in KNOWN_PLUGIN_TYPES:
+            sugg = difflib.get_close_matches(p.type, KNOWN_PLUGIN_TYPES, n=1)
+            out.append(Diagnostic(3, f"unknown plugin type {p.type!r}",
+                                  p.pos.line, p.pos.col,
+                                  quickfix=sugg[0] if sugg else None))
+    for b in prog.backends:
+        if b.type not in KNOWN_BACKENDS:
+            sugg = difflib.get_close_matches(b.type, KNOWN_BACKENDS, n=1)
+            out.append(Diagnostic(3, f"unknown backend type {b.type!r}",
+                                  b.pos.line, b.pos.col,
+                                  quickfix=sugg[0] if sugg else None))
+        port = b.config.get("port")
+        if port is not None and not (0 < int(port) < 65536):
+            out.append(Diagnostic(3, f"backend {b.name!r}: port {port} "
+                                     "out of range", b.pos.line, b.pos.col))
+    return out

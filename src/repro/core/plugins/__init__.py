@@ -1,0 +1,1 @@
+from repro.core.plugins.base import PluginChain, REQUEST_ORDER, RESPONSE_ORDER  # noqa: F401

@@ -1,0 +1,181 @@
+"""Built-in plugins (§5.3-§5.6): semantic cache, fast response, system
+prompt injection, header mutation, modality annotation + response-side
+cache write.  HaluGate / memory / RAG register from their own modules.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.plugins.base import register_plugin
+from repro.core.types import Message, Request, Response
+
+
+# ---------------------------------------------------------------------------
+# semantic cache (§5.3) — exact + cosine match, pluggable backends
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CacheEntry:
+    key_text: str
+    embedding: np.ndarray
+    response: Optional[Response]
+    pending: bool
+    created: float = field(default_factory=time.time)
+    hits: int = 0
+
+
+class SemanticCache:
+    """In-memory backend (the HNSW/Redis/Milvus tiers of §5.3 share this
+    interface; `backend` records the deployment intent)."""
+
+    def __init__(self, embed_fn, backend: str = "memory",
+                 max_entries: int = 4096):
+        self.embed_fn = embed_fn
+        self.backend = backend
+        self.max_entries = max_entries
+        self.entries: List[CacheEntry] = []
+        self.lookups = 0
+        self.hits = 0
+
+    def lookup(self, text: str, threshold: float):
+        self.lookups += 1
+        if not self.entries:
+            return None, None
+        q = self.embed_fn([text])[0]
+        mats = np.stack([e.embedding for e in self.entries])
+        sims = mats @ q
+        i = int(np.argmax(sims))
+        if sims[i] >= threshold:
+            e = self.entries[i]
+            if e.pending:
+                return None, e       # concurrent identical query in flight
+            e.hits += 1
+            self.hits += 1
+            return e.response, e
+        return None, None
+
+    def begin(self, text: str) -> CacheEntry:
+        """Write-through protocol: register pending before model call."""
+        e = CacheEntry(text, self.embed_fn([text])[0], None, pending=True)
+        self.entries.append(e)
+        if len(self.entries) > self.max_entries:
+            self.entries.pop(0)
+        return e
+
+    def complete(self, entry: CacheEntry, resp: Response):
+        entry.response = resp
+        entry.pending = False
+
+    @property
+    def hit_rate(self):
+        return self.hits / max(1, self.lookups)
+
+
+def cache_plugin(req: Request, ctx: Dict[str, Any], cfg: Dict[str, Any]
+                 ) -> Tuple[Request, Optional[Response]]:
+    cache: SemanticCache = ctx["cache"]
+    thr = cfg.get("threshold", 0.92)
+    resp, entry = cache.lookup(req.latest_user_text, thr)
+    if resp is not None:
+        out = Response(resp.content, resp.model, usage=dict(resp.usage),
+                       headers={"x-vsr-cache-hit": "true"})
+        ctx.setdefault("outcome", {})["cache_hit"] = True
+        return req, out
+    ctx["cache_entry"] = cache.begin(req.latest_user_text)
+    return req, None
+
+
+def cache_write_plugin(req: Request, ctx, cfg):
+    entry = ctx.pop("cache_entry", None)
+    resp: Response = cfg["response"]
+    if entry is not None and "cache" in ctx:
+        ctx["cache"].complete(entry, resp)
+    return req, None
+
+
+# ---------------------------------------------------------------------------
+# fast response (§5.6) — safety short-circuit / canned answers
+# ---------------------------------------------------------------------------
+
+def sse_chunks(message: str, model: str) -> List[str]:
+    """OpenAI-compatible SSE stream for `stream: true` requests."""
+    out = ['data: {"choices":[{"delta":{"role":"assistant"}}],'
+           f'"model":"{model}","object":"chat.completion.chunk"}}']
+    for word in message.split(" "):
+        out.append('data: {"choices":[{"delta":{"content":"%s "}}]}' % word)
+    out.append('data: {"choices":[{"delta":{},"finish_reason":"stop"}]}')
+    out.append("data: [DONE]")
+    return out
+
+
+def fast_response_plugin(req, ctx, cfg):
+    msg = cfg.get("message", "This request cannot be processed.")
+    resp = Response(msg, model="fast-response",
+                    headers={"x-vsr-fast-response": "true"})
+    if req.stream:
+        resp.annotations["sse"] = sse_chunks(msg, "fast-response")
+    return req, resp
+
+
+# ---------------------------------------------------------------------------
+# system prompt injection (§5.4)
+# ---------------------------------------------------------------------------
+
+def system_prompt_plugin(req, ctx, cfg):
+    mode = cfg.get("mode", "insert")
+    prompt = cfg.get("prompt", "")
+    msgs = list(req.messages)
+    sys_idx = next((i for i, m in enumerate(msgs) if m.role == "system"),
+                   None)
+    if mode == "replace" or sys_idx is None:
+        if sys_idx is not None:
+            msgs[sys_idx] = Message("system", prompt)
+        else:
+            msgs.insert(0, Message("system", prompt))
+    else:  # insert: prepend to existing system message
+        msgs[sys_idx] = Message("system", prompt + "\n" +
+                                msgs[sys_idx].content)
+    req.messages = msgs
+    return req, None
+
+
+# ---------------------------------------------------------------------------
+# header mutation (§5.5)
+# ---------------------------------------------------------------------------
+
+def headers_plugin(req, ctx, cfg):
+    for k, v in cfg.get("add", {}).items():
+        req.headers.setdefault(k, v)
+    for k, v in cfg.get("update", {}).items():
+        req.headers[k] = v
+    for k in cfg.get("delete", []):
+        req.headers.pop(k, None)
+    return req, None
+
+
+# ---------------------------------------------------------------------------
+# modality annotation (§12.2 stage 7): route text vs diffusion backends
+# ---------------------------------------------------------------------------
+
+def modality_plugin(req, ctx, cfg):
+    backend = ctx.get("signals")
+    label = "autoregressive"
+    if backend is not None:
+        m = backend.matches.get("modality:" + cfg.get("rule", "modality"))
+        if m is not None:
+            label = m.detail.get("label", label)
+    req.metadata["modality"] = label
+    return req, None
+
+
+register_plugin("cache", cache_plugin)
+register_plugin("cache_write", cache_write_plugin)
+register_plugin("fast_response", fast_response_plugin)
+register_plugin("system_prompt", system_prompt_plugin)
+register_plugin("headers", headers_plugin)
+register_plugin("modality", modality_plugin)

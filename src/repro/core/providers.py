@@ -1,0 +1,220 @@
+"""Multi-provider / multi-endpoint routing (§12.3-§12.5).
+
+* Endpoint topology with weighted selection, sticky sessions, failover.
+* Provider-specific protocol translation (OpenAI/Anthropic/Bedrock/Gemini/
+  Vertex/vLLM) over the internal Request/Response types.
+* Pluggable outbound authorization factory (API key, OAuth2, cloud IAM,
+  passthrough, custom) — invoked after selection, keeping routing
+  auth-agnostic.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.types import Endpoint, Message, Request, Response
+
+
+# ---------------------------------------------------------------------------
+# auth factory (Definition 8)
+# ---------------------------------------------------------------------------
+
+class AuthProvider:
+    name = "passthrough"
+
+    def headers(self, req: Request, ep: Endpoint) -> Dict[str, str]:
+        return {}
+
+
+class ApiKeyAuth(AuthProvider):
+    name = "api_key"
+
+    def headers(self, req, ep):
+        hdr = ep.auth_config.get("header", "Authorization")
+        key = ep.auth_config.get("key", "")
+        val = f"Bearer {key}" if hdr.lower() == "authorization" else key
+        return {hdr: val}
+
+
+class OAuth2Auth(AuthProvider):
+    """Client-credentials token acquisition with expiry-based refresh."""
+    name = "oauth2"
+
+    def __init__(self):
+        self._tok: Dict[str, Tuple[str, float]] = {}
+
+    def _fetch(self, ep: Endpoint) -> Tuple[str, float]:
+        basis = f"{ep.name}:{ep.auth_config.get('client_id', '')}:{time.time()//300}"
+        tok = hashlib.sha256(basis.encode()).hexdigest()[:32]
+        return tok, time.time() + 300
+    def headers(self, req, ep):
+        tok, exp = self._tok.get(ep.name, ("", 0.0))
+        if time.time() >= exp:
+            tok, exp = self._fetch(ep)
+            self._tok[ep.name] = (tok, exp)
+        return {"Authorization": f"Bearer {tok}"}
+
+
+class CloudIAMAuth(AuthProvider):
+    """SigV4 (bedrock) / service-account token (vertex) / AAD (azure)."""
+    name = "cloud_iam"
+
+    def headers(self, req, ep):
+        scheme = {"bedrock": "AWS4-HMAC-SHA256",
+                  "vertex": "Bearer", "azure": "Bearer"}.get(ep.provider,
+                                                             "Bearer")
+        sig = hashlib.sha256(f"{ep.provider}:{ep.name}".encode()) \
+            .hexdigest()[:24]
+        if scheme == "AWS4-HMAC-SHA256":
+            return {"Authorization":
+                    f"AWS4-HMAC-SHA256 Credential=..., Signature={sig}"}
+        return {"Authorization": f"Bearer {sig}"}
+
+
+class PassthroughAuth(AuthProvider):
+    name = "passthrough"
+
+    def headers(self, req, ep):
+        if "authorization" in req.headers:
+            return {"Authorization": req.headers["authorization"]}
+        return {}
+
+
+class AuthFactory:
+    def __init__(self):
+        self._providers: Dict[str, AuthProvider] = {
+            "api_key": ApiKeyAuth(), "oauth2": OAuth2Auth(),
+            "cloud_iam": CloudIAMAuth(), "passthrough": PassthroughAuth(),
+        }
+
+    def register(self, name: str, provider: AuthProvider):
+        self._providers[name] = provider
+
+    def outbound_headers(self, req: Request, ep: Endpoint) -> Dict[str, str]:
+        return self._providers[ep.auth].headers(req, ep)
+
+
+# ---------------------------------------------------------------------------
+# protocol translation (§12.3)
+# ---------------------------------------------------------------------------
+
+def to_provider_payload(req: Request, ep: Endpoint, model: str) -> dict:
+    msgs = [{"role": m.role, "content": m.content} for m in req.messages]
+    if ep.provider in ("openai", "azure", "vllm", "ollama"):
+        return {"model": model, "messages": msgs, "stream": req.stream}
+    if ep.provider == "anthropic":
+        system = "\n".join(m["content"] for m in msgs
+                           if m["role"] == "system")
+        rest = [m for m in msgs if m["role"] != "system"]
+        return {"model": model, "system": system, "messages": rest,
+                "max_tokens": 1024}
+    if ep.provider == "bedrock":
+        return {"modelId": model, "body": {"messages": msgs}}
+    if ep.provider in ("gemini", "vertex"):
+        return {"contents": [{"role": "model" if m["role"] == "assistant"
+                              else "user", "parts": [{"text": m["content"]}]}
+                             for m in msgs if m["role"] != "system"],
+                "systemInstruction": {"parts": [
+                    {"text": "\n".join(m["content"] for m in msgs
+                                       if m["role"] == "system")}]}}
+    raise ValueError(f"unknown provider {ep.provider!r}")
+
+
+def from_provider_payload(payload: dict, ep: Endpoint) -> Response:
+    if ep.provider in ("openai", "azure", "vllm", "ollama"):
+        ch = payload["choices"][0]
+        return Response(ch["message"]["content"], payload.get("model", ""),
+                        ch.get("finish_reason", "stop"),
+                        payload.get("usage", {}))
+    if ep.provider == "anthropic":
+        return Response(payload["content"][0]["text"],
+                        payload.get("model", ""),
+                        payload.get("stop_reason", "end_turn"),
+                        payload.get("usage", {}))
+    if ep.provider == "bedrock":
+        body = payload["body"]
+        return Response(body["messages"][-1]["content"],
+                        payload.get("modelId", ""))
+    if ep.provider in ("gemini", "vertex"):
+        cand = payload["candidates"][0]
+        return Response(cand["content"]["parts"][0]["text"],
+                        payload.get("model", ""))
+    raise ValueError(ep.provider)
+
+
+# ---------------------------------------------------------------------------
+# endpoint router: weighted selection + sticky sessions + failover
+# ---------------------------------------------------------------------------
+
+class EndpointRouter:
+    def __init__(self, endpoints: List[Endpoint],
+                 auth: Optional[AuthFactory] = None):
+        self.endpoints = endpoints
+        self.auth = auth or AuthFactory()
+        self.health: Dict[str, bool] = {e.name: True for e in endpoints}
+        self.failures: Dict[str, int] = {}
+
+    def serving(self, model: str) -> List[Endpoint]:
+        eps = [e for e in self.endpoints
+               if (not e.models or model in e.models)
+               and self.health.get(e.name, True)]
+        return eps
+
+    def resolve(self, model: str, session: Optional[str] = None
+                ) -> Optional[Endpoint]:
+        eps = self.serving(model)
+        if not eps:
+            return None
+        weights = [max(1e-6, e.weight) for e in eps]
+        total = sum(weights)
+        if session:  # sticky affinity
+            h = int(hashlib.sha256(session.encode()).hexdigest(), 16)
+            x = (h % 10_000) / 10_000 * total
+        else:
+            x = (time.time_ns() % 10_000) / 10_000 * total
+        acc = 0.0
+        for e, w in zip(eps, weights):
+            acc += w
+            if x <= acc:
+                return e
+        return eps[-1]
+
+    def mark_failure(self, ep: Endpoint, threshold: int = 3):
+        n = self.failures.get(ep.name, 0) + 1
+        self.failures[ep.name] = n
+        if n >= threshold:
+            self.health[ep.name] = False
+
+    def mark_success(self, ep: Endpoint):
+        self.failures[ep.name] = 0
+        self.health[ep.name] = True
+
+    def dispatch(self, req: Request, model: str, call_fn,
+                 session: Optional[str] = None) -> Tuple[Response, Endpoint]:
+        """call_fn(endpoint, payload, headers) -> provider payload.
+        Weighted selection with failover cascade to next endpoints."""
+        tried = set()
+        last_err = None
+        for _ in range(len(self.endpoints)):
+            ep = self.resolve(model, session)
+            if ep is None or ep.name in tried:
+                remaining = [e for e in self.serving(model)
+                             if e.name not in tried]
+                if not remaining:
+                    break
+                ep = max(remaining, key=lambda e: e.weight)
+            tried.add(ep.name)
+            payload = to_provider_payload(req, ep, model)
+            headers = self.auth.outbound_headers(req, ep)
+            try:
+                out = call_fn(ep, payload, headers)
+                self.mark_success(ep)
+                return from_provider_payload(out, ep), ep
+            except Exception as e:  # failover
+                last_err = e
+                self.mark_failure(ep)
+        raise RuntimeError(f"no healthy endpoint for {model}: {last_err}")

@@ -1,0 +1,243 @@
+"""SemanticRouter: the end-to-end request pipeline (§12.2).
+
+Stages, in strict order: API translation (Responses -> Chat) -> parse ->
+signal extraction (demand-driven, parallel) -> decision evaluation ->
+fast-response check -> semantic cache -> RAG -> modality -> memory ->
+selection -> system prompt -> headers -> endpoint resolution + outbound
+auth.  Response path: token accounting -> HaluGate -> cache/memory writes ->
+Responses-API re-wrap.
+"""
+
+from __future__ import annotations
+
+import time
+import uuid
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import repro.core.plugins.builtin  # noqa: F401  (registers plugins)
+import repro.core.halugate          # noqa: F401
+import repro.core.memory            # noqa: F401
+import repro.core.rag               # noqa: F401
+from repro.classifiers.backend import get_backend
+from repro.core.decision import DecisionEngine, confidence as rule_conf
+from repro.core.halugate import HaluGate
+from repro.core.memory import MemoryStore
+from repro.core.observability import METRICS, Span
+from repro.core.plugins.base import PluginChain
+from repro.core.plugins.builtin import SemanticCache
+from repro.core.providers import AuthFactory, EndpointRouter
+from repro.core.rag import HybridRetriever, VectorStoreBackend
+from repro.core.selection import ReMoM, SelectionContext, get_algorithm
+from repro.core.selection.algorithms import RoutingRecord
+from repro.core.signals import SignalEngine
+from repro.core.types import (Message, Request, Response, RouterConfig,
+                              RoutingOutcome)
+from repro.classifiers.backend import DOMAIN_LABELS
+
+
+class SemanticRouter:
+    def __init__(self, config: RouterConfig,
+                 call_fn: Optional[Callable] = None):
+        """``call_fn(endpoint, payload, headers) -> provider payload`` is the
+        transport; defaults to an echo stub (tests) — examples inject the
+        fleet-serving transport."""
+        self.config = config
+        self.backend = get_backend(config.embedding_backend)
+        self.signals = SignalEngine(config.signals, self.backend)
+        self.engine = DecisionEngine(config.decisions,
+                                     strategy=config.strategy)
+        from repro.core.types import Endpoint
+        endpoints = config.endpoints or [Endpoint("default", "vllm")]
+        self.endpoint_router = EndpointRouter(endpoints)
+        self.selection_ctx = SelectionContext(profiles=config.model_profiles)
+        self.cache = SemanticCache(self.backend.embed)
+        self.memory = MemoryStore(self.backend.embed)
+        self.rag_store = VectorStoreBackend(self.backend.embed)
+        self.rag = HybridRetriever(self.rag_store)
+        self.halugate = HaluGate(self.backend)
+        self.call_fn = call_fn or self._echo_call
+        self.used_types = config.used_signal_types()
+        self.responses_state: Dict[str, Dict[str, Any]] = {}
+
+    # -- default transport ---------------------------------------------------
+    @staticmethod
+    def _echo_call(ep, payload, headers):
+        msgs = payload.get("messages") or payload.get("body", {}).get(
+            "messages") or []
+        last = msgs[-1]["content"] if msgs else ""
+        return {"choices": [{"message": {
+                    "content": f"[{payload.get('model', 'model')}] echo: "
+                               f"{last[:200]}"},
+                "finish_reason": "stop"}],
+                "model": payload.get("model", ""),
+                "usage": {"prompt_tokens": sum(len(m['content']) // 4
+                                               for m in msgs),
+                          "completion_tokens": 16}}
+
+    # -- Responses API translation (§12.4) ------------------------------------
+    def _inbound_translate(self, req: Request) -> Request:
+        if req.api != "responses":
+            return req
+        if req.previous_response_id:
+            state = self.responses_state.get(req.previous_response_id)
+            if state:
+                req.messages = [Message(**m) for m in state["messages"]] + \
+                    req.messages
+                req.metadata["pinned_model"] = state.get("model")
+        return req
+
+    def _outbound_translate(self, req: Request, resp: Response) -> Response:
+        if req.api != "responses":
+            return resp
+        rid = "resp_" + uuid.uuid4().hex[:16]
+        resp.response_id = rid
+        history = [dict(role=m.role, content=m.content)
+                   for m in req.messages] + \
+            [dict(role="assistant", content=resp.content)]
+        self.responses_state[rid] = {"messages": history,
+                                     "model": resp.model}
+        resp.annotations["output"] = [{"type": "message",
+                                       "content": resp.content}]
+        return resp
+
+    # -- main entry --------------------------------------------------------------
+    def route(self, req: Request) -> Tuple[Response, RoutingOutcome]:
+        root = Span("request")
+        t0 = time.perf_counter()
+        req = self._inbound_translate(req)
+
+        # 1. signal extraction (demand-driven)
+        sig_span = root.child("signals")
+        sig = self.signals.extract(req, self.used_types or None)
+        for k, m in sig.matches.items():
+            sig_span.child(f"signal:{k}").finish(matched=m.matched,
+                                                 conf=round(m.confidence, 3))
+            METRICS.inc("signal_evaluations_total", type=m.key.type)
+            if m.matched:
+                METRICS.inc("signal_matches_total", type=m.key.type)
+        sig_span.finish()
+
+        # 2. decision evaluation
+        dec_span = root.child("decision")
+        res = self.engine.evaluate(sig)
+        dec_span.finish(decision=res.decision.name if res.decision else None,
+                        confidence=round(res.confidence, 3))
+        outcome = RoutingOutcome(
+            decision=res.decision.name if res.decision else None,
+            model=self.config.default_model, endpoint=None,
+            confidence=res.confidence, signals=sig)
+
+        plugins = dict(self.config.plugin_templates)
+        if res.decision:
+            METRICS.inc("decision_matches_total", decision=res.decision.name)
+            plugins = dict(res.decision.plugins)
+        # request-side plugins imply their response-side halves
+        if "cache" in plugins:
+            plugins.setdefault("cache_write", {"enabled": True})
+        if "memory" in plugins:
+            plugins.setdefault("memory_write", {"enabled": True})
+
+        ctx: Dict[str, Any] = {"cache": self.cache, "memory": self.memory,
+                               "rag": self.rag, "halugate": self.halugate,
+                               "signals": sig, "outcome": {}}
+        chain = PluginChain(plugins, ctx)
+
+        # 3-8. request-path plugins (fast response / cache short-circuit)
+        req, short, ptrace = chain.run_request(req)
+        for t in ptrace:
+            root.child(f"plugin:{t['plugin']}").finish(**t)
+        if short is not None:
+            outcome.fast_response = short
+            outcome.cache_hit = ctx.get("outcome", {}).get("cache_hit", False)
+            short.headers.update(self._signal_headers(sig, res))
+            METRICS.observe("routing_latency_ms",
+                            (time.perf_counter() - t0) * 1e3)
+            root.finish()
+            outcome.trace = [dict(span=s.name, ms=round(s.duration_ms, 3))
+                             for _, s in root.flatten()]
+            return self._outbound_translate(req, short), outcome
+
+        # 9. semantic model selection over the decision's candidate pool
+        model, conf = self._select(req, res, sig)
+        if req.metadata.get("pinned_model"):
+            model = req.metadata["pinned_model"]   # conversation pinning
+        outcome.model = model
+
+        # 10. endpoint resolution + dispatch with failover
+        up_span = root.child("upstream", model=model)
+        resp, ep = self.endpoint_router.dispatch(
+            req, model, self.call_fn, session=req.user)
+        up_span.finish(endpoint=ep.name, provider=ep.provider)
+        outcome.endpoint = ep.name
+        METRICS.inc("model_requests_total", model=model)
+        METRICS.inc("tokens_total",
+                    resp.usage.get("completion_tokens", 0), model=model)
+
+        # response path: halugate -> cache/memory writes
+        resp, rtrace = chain.run_response(req, resp)
+        for t in rtrace:
+            root.child(f"plugin:{t['plugin']}").finish(**t)
+
+        resp.headers.update(self._signal_headers(sig, res))
+        latency = (time.perf_counter() - t0) * 1e3
+        METRICS.observe("routing_latency_ms", latency)
+        METRICS.observe("model_latency_ms", latency, model=model)
+        self.selection_ctx.observe_latency(model, latency)
+        root.finish()
+        outcome.trace = [dict(span=s.name, ms=round(s.duration_ms, 3))
+                         for _, s in root.flatten()]
+        return self._outbound_translate(req, resp), outcome
+
+    # ------------------------------------------------------------------
+    def _select(self, req: Request, res, sig) -> Tuple[str, float]:
+        if res.decision is None or not res.decision.model_refs:
+            return self.config.default_model, 0.0
+        cands = [m.name for m in res.decision.model_refs]
+        if len(cands) == 1:
+            return cands[0], res.confidence
+        algo_name = res.decision.algorithm or "static"
+        e_q = self.backend.embed([req.latest_user_text])[0]
+        z = 0
+        for k, m in sig.matches.items():
+            lab = m.detail.get("label") if m.detail else None
+            if k.startswith("domain:") and lab in DOMAIN_LABELS:
+                z = DOMAIN_LABELS.index(lab)
+                break
+        cfg = dict(res.decision.algorithm_config)
+        cfg.setdefault("user", req.user or "anon")
+        if algo_name == "remom":
+            weights = [m.weight for m in res.decision.model_refs]
+            remom = ReMoM(
+                call_fn=lambda m, p, s: self._remom_call(req, m, p),
+                breadth=cfg.get("breadth", [2]),
+                distribution=cfg.get("distribution", "equal"))
+            content = remom.run(req.latest_user_text, cands, weights)
+            req.metadata["remom_content"] = content
+            return cands[0], 1.0
+        algo = get_algorithm(algo_name)
+        return algo(e_q, z, cands, self.selection_ctx, cfg)
+
+    def _remom_call(self, req: Request, model: str, prompt: str) -> str:
+        r2 = Request(messages=[Message("user", prompt)], user=req.user)
+        resp, _ep = self.endpoint_router.dispatch(r2, model, self.call_fn)
+        return resp.content
+
+    @staticmethod
+    def _signal_headers(sig, res) -> Dict[str, str]:
+        out = {}
+        for k, m in sig.matches.items():
+            if m.matched and k.startswith(("jailbreak:", "pii:")):
+                typ = k.split(":", 1)[0]
+                out[f"x-vsr-matched-{typ}"] = k.split(":", 1)[1]
+        if res.decision:
+            out["x-vsr-decision"] = res.decision.name
+        return out
+
+    # -- feedback ingestion: closes the loop (§2.4) -------------------------
+    def record_feedback(self, req: Request, model: str, quality: float):
+        e = self.backend.embed([req.latest_user_text])[0]
+        self.selection_ctx.add_record(
+            RoutingRecord(e, 0, model, quality, req.user or "anon"))
+        self.selection_ctx.update_feedback(model, quality >= 0.5)

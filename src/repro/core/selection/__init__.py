@@ -1,0 +1,3 @@
+from repro.core.selection.algorithms import (  # noqa: F401
+    ALGORITHMS, SelectionContext, get_algorithm)
+from repro.core.selection.remom import ReMoM  # noqa: F401

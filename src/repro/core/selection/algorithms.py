@@ -1,0 +1,394 @@
+"""Semantic model selection (§10): thirteen algorithms behind one interface.
+
+    Select: (e_q, domain z, candidates M_d*, state) -> (model_name, conf)
+
+Families: rating (static, elo), embedding (routerdc, hybrid), cascading
+(automix), classical ML (knn, kmeans, svm, mlp), RL (thompson, gmt),
+latency-aware, and multi-round reasoning (remom, in remom.py).
+All learn/update from RoutingRecords so the closed loop (§2.4) is real.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.types import ModelProfile
+
+
+@dataclass
+class RoutingRecord:
+    embedding: np.ndarray
+    domain: int
+    model: str
+    quality: float
+    user: str = "anon"
+    latency_ms: float = 0.0
+
+
+@dataclass
+class SelectionContext:
+    """Shared state across requests (the closed-loop memory)."""
+    profiles: Dict[str, ModelProfile]
+    records: List[RoutingRecord] = field(default_factory=list)
+    elo: Dict[str, float] = field(default_factory=dict)
+    beta: Dict[str, List[float]] = field(default_factory=dict)  # [alpha, beta]
+    latency: Dict[str, List[float]] = field(default_factory=dict)
+    model_emb: Dict[str, np.ndarray] = field(default_factory=dict)
+    rng: random.Random = field(default_factory=lambda: random.Random(0))
+
+    # ---- closed-loop updates (Equation 1 / §10.2 / §10.6) -----------------
+    def update_elo(self, winner: str, loser: str, k: float = 24.0):
+        rw = self.elo.setdefault(winner, 1200.0)
+        rl = self.elo.setdefault(loser, 1200.0)
+        pw = 1.0 / (1.0 + 10 ** ((rl - rw) / 400.0))
+        self.elo[winner] = rw + k * (1 - pw)
+        self.elo[loser] = rl - k * (1 - pw)
+
+    def update_feedback(self, model: str, positive: bool):
+        ab = self.beta.setdefault(model, [1.0, 1.0])
+        ab[0 if positive else 1] += 1.0
+
+    def observe_latency(self, model: str, ms: float):
+        self.latency.setdefault(model, []).append(ms)
+
+    def add_record(self, rec: RoutingRecord):
+        self.records.append(rec)
+        # RouterDC-style model embedding: EMA toward good queries, away
+        # from bad ones (dual-contrastive update, §10.3)
+        e = self.model_emb.setdefault(
+            rec.model, np.zeros_like(rec.embedding))
+        sign = 1.0 if rec.quality >= 0.5 else -0.3
+        e += 0.1 * sign * (rec.embedding - e)
+
+
+Algorithm = Callable[[np.ndarray, int, Sequence[str], SelectionContext,
+                      Dict[str, Any]], Tuple[str, float]]
+
+
+# ---------------------------------------------------------------------------
+# rating-based
+# ---------------------------------------------------------------------------
+
+def select_static(e_q, z, cands, ctx, cfg):
+    best = max(cands, key=lambda m: ctx.profiles[m].quality
+               if m in ctx.profiles else 0.0)
+    conf = ctx.profiles[best].quality if best in ctx.profiles else 0.5
+    return best, conf
+
+
+def select_elo(e_q, z, cands, ctx, cfg):
+    """Bradley-Terry sampling proportional to expected win rate (Eq. 33)."""
+    ratings = [ctx.elo.get(m, ctx.profiles[m].elo if m in ctx.profiles
+                           else 1200.0) for m in cands]
+    mean_r = sum(ratings) / len(ratings)
+    win = [1.0 / (1.0 + 10 ** ((mean_r - r) / 400.0)) for r in ratings]
+    total = sum(win)
+    if cfg.get("sample", False):
+        x = ctx.rng.random() * total
+        acc = 0.0
+        for m, w in zip(cands, win):
+            acc += w
+            if x <= acc:
+                return m, w / total
+    i = int(np.argmax(win))
+    return cands[i], win[i] / total
+
+
+# ---------------------------------------------------------------------------
+# embedding-based
+# ---------------------------------------------------------------------------
+
+def select_routerdc(e_q, z, cands, ctx, cfg):
+    """Query-model embedding cosine (Eq. 34)."""
+    sims = []
+    for m in cands:
+        e_m = ctx.model_emb.get(m)
+        if e_m is None or not np.any(e_m):
+            sims.append(0.0)
+        else:
+            sims.append(float(e_q @ e_m /
+                              (np.linalg.norm(e_m) + 1e-9)))
+    if max(sims) <= 0.0:
+        return select_static(e_q, z, cands, ctx, cfg)
+    i = int(np.argmax(sims))
+    return cands[i], max(0.0, sims[i])
+
+
+def select_hybrid(e_q, z, cands, ctx, cfg):
+    """alpha*elo~ + beta*cos + gamma*(1-cost~) (Eq. 35, RouterBench)."""
+    a = cfg.get("alpha", 0.4)
+    b = cfg.get("beta", 0.3)
+    g = cfg.get("gamma", 0.3)
+    elos = np.array([ctx.elo.get(m, 1200.0) for m in cands])
+    er = (elos - elos.min()) / max(1e-9, elos.max() - elos.min()) \
+        if len(cands) > 1 else np.ones(1)
+    cos = np.array([select_routerdc(e_q, z, [m], ctx, cfg)[1]
+                    for m in cands])
+    costs = np.array([ctx.profiles[m].cost_per_mtok if m in ctx.profiles
+                      else 1.0 for m in cands])
+    cr = (costs - costs.min()) / max(1e-9, costs.max() - costs.min()) \
+        if len(cands) > 1 else np.zeros(1)
+    score = a * er + b * cos + g * (1 - cr)
+    i = int(np.argmax(score))
+    return cands[i], float(score[i])
+
+
+# ---------------------------------------------------------------------------
+# cascading (AutoMix, §10.4)
+# ---------------------------------------------------------------------------
+
+def select_automix(e_q, z, cands, ctx, cfg):
+    """POMDP cascade: order by cost, escalate while self-verification fails.
+    ``verify_fn(model) -> q_hat`` is injected for live use; offline it
+    falls back to profile quality + per-model threshold."""
+    order = sorted(cands, key=lambda m: ctx.profiles[m].cost_per_mtok
+                   if m in ctx.profiles else 1.0)
+    thr = cfg.get("threshold", 0.6)
+    verify = cfg.get("verify_fn")
+    expected_cost = 0.0
+    for m in order[:-1]:
+        prof = ctx.profiles.get(m)
+        expected_cost += prof.cost_per_mtok if prof else 1.0
+        q_hat = verify(m) if verify else (prof.quality if prof else 0.5)
+        if q_hat >= thr:
+            return m, q_hat
+    last = order[-1]
+    prof = ctx.profiles.get(last)
+    return last, prof.quality if prof else 0.5
+
+
+# ---------------------------------------------------------------------------
+# classical ML (§10.5) — trained on RoutingRecords
+# ---------------------------------------------------------------------------
+
+def _features(e_q: np.ndarray, z: int, n_domains: int = 14) -> np.ndarray:
+    oh = np.zeros(n_domains, np.float32)
+    oh[min(z, n_domains - 1)] = 1.0
+    return np.concatenate([e_q, oh])
+
+
+def select_knn(e_q, z, cands, ctx, cfg):
+    """Quality-weighted k-NN vote (Eq. 38)."""
+    k = cfg.get("k", 5)
+    recs = [r for r in ctx.records if r.model in cands]
+    if not recs:
+        return select_static(e_q, z, cands, ctx, cfg)
+    f = _features(e_q, z)
+    feats = np.stack([_features(r.embedding, r.domain) for r in recs])
+    d = np.linalg.norm(feats - f, axis=1)
+    nn = np.argsort(d)[:k]
+    votes: Dict[str, float] = {}
+    for i in nn:
+        votes[recs[i].model] = votes.get(recs[i].model, 0.0) + \
+            recs[i].quality
+    best = max(votes, key=votes.get)
+    return best, votes[best] / max(1e-9, sum(votes.values()))
+
+
+def select_kmeans(e_q, z, cands, ctx, cfg):
+    """Cluster assignment -> best model for the cluster (Eq. 39)."""
+    alpha = cfg.get("alpha", 0.7)
+    k = cfg.get("clusters", 4)
+    recs = [r for r in ctx.records if r.model in cands]
+    if len(recs) < k:
+        return select_static(e_q, z, cands, ctx, cfg)
+    X = np.stack([r.embedding for r in recs])
+    rng = np.random.RandomState(0)
+    cents = X[rng.choice(len(X), k, replace=False)]
+    for _ in range(10):
+        assign = np.argmin(np.linalg.norm(X[:, None] - cents[None], axis=2),
+                           axis=1)
+        for c in range(k):
+            pts = X[assign == c]
+            if len(pts):
+                cents[c] = pts.mean(0)
+    cq = int(np.argmin(np.linalg.norm(cents - e_q, axis=1)))
+    scores: Dict[str, List[float]] = {}
+    for r, a in zip(recs, assign):
+        if a == cq:
+            scores.setdefault(r.model, []).append(r.quality)
+    if not scores:
+        return select_static(e_q, z, cands, ctx, cfg)
+    def sc(m):
+        q = float(np.mean(scores[m]))
+        lat = float(np.mean(ctx.latency.get(m, [200.0]))) / 1000.0
+        return alpha * q - (1 - alpha) * lat
+    best = max(scores, key=sc)
+    return best, float(np.mean(scores[best]))
+
+
+def select_svm(e_q, z, cands, ctx, cfg):
+    """Linear one-vs-rest SVM (Pegasos SGD) over routing records."""
+    recs = [r for r in ctx.records if r.model in cands and r.quality >= 0.5]
+    if len(recs) < 4 or len({r.model for r in recs}) < 2:
+        return select_static(e_q, z, cands, ctx, cfg)
+    models = sorted({r.model for r in recs})
+    X = np.stack([_features(r.embedding, r.domain) for r in recs])
+    lam = cfg.get("lambda", 0.01)
+    scores = {}
+    for m in models:
+        y = np.array([1.0 if r.model == m else -1.0 for r in recs])
+        w = np.zeros(X.shape[1])
+        for t in range(1, cfg.get("epochs", 20) * len(recs) + 1):
+            i = (t * 2654435761) % len(recs)
+            eta = 1.0 / (lam * t)
+            margin = y[i] * (w @ X[i])
+            w *= (1 - eta * lam)
+            if margin < 1:
+                w += eta * y[i] * X[i]
+        scores[m] = float(w @ _features(e_q, z))
+    best = max(scores, key=scores.get)
+    conf = 1.0 / (1.0 + math.exp(-scores[best]))
+    return best, conf
+
+
+def select_mlp(e_q, z, cands, ctx, cfg):
+    """2-hidden-layer ReLU MLP (Eq. 40), trained in JAX on records."""
+    recs = [r for r in ctx.records if r.model in cands]
+    models = sorted({r.model for r in recs})
+    if len(recs) < 8 or len(models) < 2:
+        return select_static(e_q, z, cands, ctx, cfg)
+    import jax
+    import jax.numpy as jnp
+    X = jnp.asarray(np.stack([_features(r.embedding, r.domain)
+                              for r in recs]))
+    y = jnp.asarray([models.index(r.model) for r in recs])
+    qw = jnp.asarray([r.quality for r in recs])
+    key = jax.random.PRNGKey(0)
+    h = cfg.get("hidden", 64)
+    dims = [X.shape[1], h, h, len(models)]
+    ks = jax.random.split(key, 3)
+    params = [(jax.random.normal(ks[i], (dims[i], dims[i + 1])) * 0.1,
+               jnp.zeros(dims[i + 1])) for i in range(3)]
+
+    def fwd(p, x):
+        for w, b in p[:-1]:
+            x = jax.nn.relu(x @ w + b)
+        w, b = p[-1]
+        return x @ w + b
+
+    def loss(p):
+        logits = fwd(p, X)
+        ll = jax.nn.log_softmax(logits)
+        return -(qw * jnp.take_along_axis(ll, y[:, None], 1)[:, 0]).mean()
+
+    lr = 0.05
+    val_grad = jax.jit(jax.value_and_grad(loss))
+    for _ in range(cfg.get("steps", 60)):
+        _, g = val_grad(params)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+    probs = jax.nn.softmax(fwd(params, jnp.asarray(_features(e_q, z))[None]))
+    i = int(jnp.argmax(probs[0]))
+    return models[i], float(probs[0, i])
+
+
+# ---------------------------------------------------------------------------
+# reinforcement learning (§10.6)
+# ---------------------------------------------------------------------------
+
+def select_thompson(e_q, z, cands, ctx, cfg):
+    best, best_s = None, -1.0
+    for m in cands:
+        a, b = ctx.beta.get(m, [1.0, 1.0])
+        s = np.random.default_rng(
+            abs(hash((m, len(ctx.records)))) % (2 ** 31)).beta(a, b)
+        if s > best_s:
+            best, best_s = m, s
+    return best, float(best_s)
+
+
+def select_gmt(e_q, z, cands, ctx, cfg):
+    """GMTRouter-style heterogeneous-graph scoring: two rounds of
+    mean-aggregation over (user, query, model) interaction edges."""
+    user = cfg.get("user", "anon")
+    recs = [r for r in ctx.records if r.model in cands]
+    if not recs:
+        return select_static(e_q, z, cands, ctx, cfg)
+    # node features: users/models start from interaction means
+    model_feat: Dict[str, np.ndarray] = {}
+    user_feat: Dict[str, np.ndarray] = {}
+    for _ in range(2):  # message-passing rounds
+        mf2, uf2 = {}, {}
+        for m in cands:
+            neigh = [np.concatenate([r.embedding, [r.quality]])
+                     for r in recs if r.model == m]
+            if neigh:
+                base = np.mean(neigh, axis=0)
+                u_msg = [user_feat.get(r.user) for r in recs
+                         if r.model == m and r.user in user_feat]
+                if u_msg:
+                    base = 0.7 * base + 0.3 * np.mean(u_msg, axis=0)
+                mf2[m] = base
+        for u in {r.user for r in recs}:
+            neigh = [model_feat.get(r.model) for r in recs
+                     if r.user == u and r.model in model_feat]
+            if neigh:
+                uf2[u] = np.mean(neigh, axis=0)
+            else:
+                mine = [np.concatenate([r.embedding, [r.quality]])
+                        for r in recs if r.user == u]
+                uf2[u] = np.mean(mine, axis=0)
+        model_feat, user_feat = mf2, uf2
+    qf = np.concatenate([e_q, [0.5]])
+    uf = user_feat.get(user)
+    scores = {}
+    for m in cands:
+        f = model_feat.get(m)
+        if f is None:
+            scores[m] = 0.0
+            continue
+        s = float(qf @ f / (np.linalg.norm(qf) * np.linalg.norm(f) + 1e-9))
+        if uf is not None:
+            s = 0.7 * s + 0.3 * float(
+                uf @ f / (np.linalg.norm(uf) * np.linalg.norm(f) + 1e-9))
+        scores[m] = s
+    best = max(scores, key=scores.get)
+    return best, max(0.0, scores[best])
+
+
+# ---------------------------------------------------------------------------
+# latency-aware (§10.7)
+# ---------------------------------------------------------------------------
+
+def select_latency(e_q, z, cands, ctx, cfg):
+    """Normalized percentile TPOT/TTFT score, minimized (Eq. 43)."""
+    pcts = cfg.get("percentiles", [50, 95])
+    obs = {m: ctx.latency.get(m) or
+           [ctx.profiles[m].latency_ms if m in ctx.profiles else 200.0]
+           for m in cands}
+    per_p = {}
+    for p in pcts:
+        vals = {m: float(np.percentile(obs[m], p)) for m in cands}
+        mn = min(vals.values()) or 1.0
+        per_p[p] = {m: v / mn for m, v in vals.items()}
+    scores = {m: float(np.mean([per_p[p][m] for p in pcts])) for m in cands}
+    best = min(scores, key=scores.get)
+    return best, 1.0 / scores[best]
+
+
+ALGORITHMS: Dict[str, Algorithm] = {
+    "static": select_static,
+    "elo": select_elo,
+    "routerdc": select_routerdc,
+    "hybrid": select_hybrid,
+    "automix": select_automix,
+    "knn": select_knn,
+    "kmeans": select_kmeans,
+    "svm": select_svm,
+    "mlp": select_mlp,
+    "thompson": select_thompson,
+    "gmt": select_gmt,
+    "latency": select_latency,
+    # "remom" dispatches through repro.core.selection.remom (multi-round)
+}
+
+
+def get_algorithm(name: str) -> Algorithm:
+    if name == "confidence":      # DSL alias: confidence-weighted hybrid
+        return select_hybrid
+    return ALGORITHMS[name]

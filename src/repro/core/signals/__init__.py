@@ -1,0 +1,1 @@
+from repro.core.signals.base import SignalEngine  # noqa: F401

@@ -1,0 +1,73 @@
+"""Signal extraction orchestrator (§3.4): demand-driven, parallel.
+
+Only signal types referenced by at least one active decision are computed
+(T_used); heuristic evaluators run inline (sub-ms), learned evaluators run
+on a thread pool mirroring the paper's goroutine fan-out, with wall-clock =
+max(evaluators) rather than the sum.  Per-signal latency is recorded into
+the SignalMatch for the observability layer.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, Iterable, Optional, Set
+
+from repro.classifiers.backend import ClassifierBackend, get_backend
+from repro.core.signals.heuristic import HEURISTIC_EVALUATORS
+from repro.core.signals.learned import LearnedSignals
+from repro.core.types import (HEURISTIC_TYPES, Request, SignalKey,
+                              SignalMatch, SignalResult)
+
+# Extensibility (§3.5): operators register domain-specific signal types here;
+# the decision engine references them by (type, name) with no engine changes.
+EXTRA_EVALUATORS: Dict[str, Any] = {}
+
+
+def register_signal_type(type_: str, evaluator):
+    """evaluator: (name, cfg, request) -> SignalMatch"""
+    EXTRA_EVALUATORS[type_] = evaluator
+
+
+class SignalEngine:
+    def __init__(self, signals_cfg: Dict[str, Dict[str, Dict[str, Any]]],
+                 backend: Optional[ClassifierBackend] = None,
+                 max_workers: int = 8):
+        self.cfg = signals_cfg
+        self.backend = backend or get_backend("hash")
+        self.learned = LearnedSignals(self.backend)
+        self.learned.preload(signals_cfg)
+        self.pool = ThreadPoolExecutor(max_workers=max_workers)
+
+    def _eval_one(self, type_: str, name: str, cfg: Dict[str, Any],
+                  req: Request) -> SignalMatch:
+        t0 = time.perf_counter()
+        if type_ in HEURISTIC_EVALUATORS:
+            m = HEURISTIC_EVALUATORS[type_](name, cfg, req)
+        elif type_ in EXTRA_EVALUATORS:
+            m = EXTRA_EVALUATORS[type_](name, cfg, req)
+        else:
+            m = self.learned.evaluator(type_)(name, cfg, req)
+        m.latency_ms = (time.perf_counter() - t0) * 1e3
+        return m
+
+    def extract(self, req: Request,
+                used_types: Optional[Set[str]] = None) -> SignalResult:
+        """Demand-driven parallel extraction.  ``used_types`` is
+        T_used = union of signal types referenced by active decisions;
+        None means evaluate everything configured."""
+        result = SignalResult()
+        jobs = []
+        for type_, rules in self.cfg.items():
+            if used_types is not None and type_ not in used_types:
+                continue
+            for name, cfg in rules.items():
+                if type_ in HEURISTIC_TYPES:
+                    result.add(self._eval_one(type_, name, cfg, req))
+                else:
+                    jobs.append((type_, name, cfg))
+        futures = [self.pool.submit(self._eval_one, t, n, c, req)
+                   for t, n, c in jobs]
+        for f in futures:
+            result.add(f.result())
+        return result

@@ -1,0 +1,196 @@
+"""Core datatypes for the semantic router (paper §2-§4).
+
+Everything is a plain dataclass; the RouterConfig is the compile target of
+the DSL (§6) and the single source the engine executes from.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclass
+class Message:
+    role: str
+    content: str
+
+
+@dataclass
+class Request:
+    """An OpenAI-ish chat completion request + transport metadata."""
+    messages: List[Message]
+    model: Optional[str] = None
+    user: Optional[str] = None
+    headers: Dict[str, str] = field(default_factory=dict)
+    stream: bool = False
+    metadata: Dict[str, Any] = field(default_factory=dict)
+    previous_response_id: Optional[str] = None
+    api: str = "chat"            # "chat" | "responses"
+
+    @property
+    def latest_user_text(self) -> str:
+        for m in reversed(self.messages):
+            if m.role == "user":
+                return m.content
+        return ""
+
+    @property
+    def user_texts(self) -> List[str]:
+        return [m.content for m in self.messages if m.role == "user"]
+
+    @property
+    def full_text(self) -> str:
+        return "\n".join(m.content for m in self.messages)
+
+
+@dataclass
+class Response:
+    content: str
+    model: str
+    finish_reason: str = "stop"
+    usage: Dict[str, int] = field(default_factory=dict)
+    headers: Dict[str, str] = field(default_factory=dict)
+    response_id: Optional[str] = None
+    annotations: Dict[str, Any] = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# signals (paper §3, Definitions 2-3)
+# ---------------------------------------------------------------------------
+
+SIGNAL_TYPES = (
+    "keyword", "context", "language", "authz",                       # heuristic
+    "embedding", "domain", "fact_check", "user_feedback", "modality",
+    "complexity", "jailbreak", "pii", "preference",                  # learned
+)
+
+HEURISTIC_TYPES = ("keyword", "context", "language", "authz")
+
+
+@dataclass(frozen=True)
+class SignalKey:
+    type: str
+    name: str
+
+    def __str__(self):
+        return f"{self.type}:{self.name}"
+
+
+@dataclass
+class SignalMatch:
+    key: SignalKey
+    matched: bool
+    confidence: float
+    latency_ms: float = 0.0
+    detail: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class SignalResult:
+    """Structured signal vector s = S(r)."""
+    matches: Dict[str, SignalMatch] = field(default_factory=dict)
+
+    def add(self, m: SignalMatch):
+        self.matches[str(m.key)] = m
+
+    def matched(self, type_: str, name: str) -> bool:
+        m = self.matches.get(f"{type_}:{name}")
+        return bool(m and m.matched)
+
+    def confidence(self, type_: str, name: str) -> float:
+        m = self.matches.get(f"{type_}:{name}")
+        return m.confidence if m else 0.0
+
+    def as_vector(self, keys: List[SignalKey]):
+        return [1.0 if self.matched(k.type, k.name) else 0.0 for k in keys], \
+               [self.confidence(k.type, k.name) for k in keys]
+
+
+# ---------------------------------------------------------------------------
+# model fleet / endpoints (paper §2.1, §12.3)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ModelRef:
+    name: str
+    reasoning: bool = False
+    effort: str = "medium"
+    lora_adapter: Optional[str] = None
+    weight: float = 1.0
+
+
+@dataclass
+class Endpoint:
+    name: str
+    provider: str                 # vllm|openai|anthropic|azure|bedrock|gemini|vertex|ollama
+    address: str = "127.0.0.1"
+    port: int = 8000
+    weight: float = 1.0
+    models: List[str] = field(default_factory=list)
+    auth: str = "passthrough"     # api_key|oauth2|cloud_iam|passthrough|custom
+    auth_config: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class ModelProfile:
+    """Capability/cost profile used by the selection algorithms (§10)."""
+    name: str
+    cost_per_mtok: float = 1.0
+    quality: float = 0.5
+    elo: float = 1200.0
+    latency_ms: float = 200.0
+    tags: Tuple[str, ...] = ()
+    arch: Optional[str] = None    # fleet arch id when served locally
+
+
+# ---------------------------------------------------------------------------
+# decisions (paper §4, Definitions 4-5)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Decision:
+    name: str
+    rule: "RuleNode"              # repro.core.decision.RuleNode
+    model_refs: List[ModelRef]
+    priority: int = 0
+    plugins: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    algorithm: str = "static"
+    algorithm_config: Dict[str, Any] = field(default_factory=dict)
+    description: str = ""
+
+
+@dataclass
+class RouterConfig:
+    """Gamma = (S, D, Pi, E): the deployment configuration (Definition 1)."""
+    signals: Dict[str, Dict[str, Dict[str, Any]]] = field(default_factory=dict)
+    decisions: List[Decision] = field(default_factory=list)
+    plugin_templates: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    endpoints: List[Endpoint] = field(default_factory=list)
+    model_profiles: Dict[str, ModelProfile] = field(default_factory=dict)
+    default_model: str = ""
+    strategy: str = "priority"    # priority | confidence
+    embedding_backend: str = "hash"
+
+    def used_signal_types(self) -> set:
+        from repro.core.decision import leaf_keys
+        used = set()
+        for d in self.decisions:
+            for key in leaf_keys(d.rule):
+                used.add(key.type)
+        return used
+
+
+@dataclass
+class RoutingOutcome:
+    decision: Optional[str]
+    model: str
+    endpoint: Optional[str]
+    confidence: float
+    signals: SignalResult
+    fast_response: Optional[Response] = None
+    cache_hit: bool = False
+    headers: Dict[str, str] = field(default_factory=dict)
+    trace: List[Dict[str, Any]] = field(default_factory=list)
+    started: float = field(default_factory=time.time)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA + causal + sliding
+window + length masking).  O(S^2) memory — test-scale only."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q, k, v, *, causal: bool = False,
+                        sliding_window: int = 0,
+                        kv_len: Optional[jax.Array] = None,
+                        q_offset: int = 0):
+    """q: (B, Sq, Hq, hd); k/v: (B, Skv, Hkv, hd); Hq = G * Hkv.
+
+    sliding_window w: position i attends to (i-w, i].  kv_len masks the
+    valid KV prefix (decode against a partially-filled cache)."""
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) / math.sqrt(hd)
+
+    iq = jnp.arange(Sq)[:, None] + q_offset
+    ik = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= ik <= iq
+    if sliding_window > 0:
+        mask &= ik > iq - sliding_window
+    mask = jnp.broadcast_to(mask[None], (B, Sq, Skv))
+    if kv_len is not None:
+        kv_len = jnp.asarray(kv_len).reshape(B, 1, 1)
+        mask &= ik[None] < kv_len
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, vf)
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)

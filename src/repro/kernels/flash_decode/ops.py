@@ -1,0 +1,43 @@
+"""Single-token GQA decode attention (KV-cache scan), Pallas-backed.
+
+Decode is the memory-bound serving hot path (decode_32k / long_500k cells):
+per step each KV block is streamed HBM->VMEM exactly once with online
+softmax.  The tile math is shared with ``kernels/flash_attention`` — decode
+is the Sq=G specialization of the folded kernel: the G grouped q-heads of one
+KV head become the q-tile rows, so the MXU tile is (G, hd) x (hd, bk).
+Rows are padded to the 8-sublane minimum for TPU tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_folded
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q, k, v, kv_len, *, block_k: int = 128,
+                 interpret: bool = True):
+    """q: (B, Hq, hd); k/v: (B, Skv, Hkv, hd); kv_len: (B,) int32.
+
+    Returns (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    Gp = max(8, G)  # pad sublanes
+
+    qf = q.reshape(B, Hkv, G, hd).reshape(B * Hkv, G, hd)
+    if Gp != G:
+        qf = jnp.pad(qf, ((0, 0), (0, Gp - G), (0, 0)))
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd)
+
+    out = flash_attention_folded(
+        qf, kf, vf, kv_len.astype(jnp.int32), causal=False, window=0,
+        q_offset=0, block_q=Gp, block_k=block_k, interpret=interpret)
+    out = out[:, :G, :].reshape(B, Hkv, G, hd).reshape(B, Hq, hd)
+    return out

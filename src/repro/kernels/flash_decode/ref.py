@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_reference(q, k, v, kv_len):
+    """q: (B, Hq, hd); k/v: (B, Skv, Hkv, hd); kv_len: (B,) valid prefix.
+
+    Returns (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, hd)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32))
+    logits = logits / math.sqrt(hd)
+    mask = jnp.arange(Skv)[None] < kv_len[:, None]          # (B, Skv)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)

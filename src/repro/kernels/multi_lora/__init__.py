@@ -1,0 +1,2 @@
+from repro.kernels.multi_lora.ops import multi_lora  # noqa: F401
+from repro.kernels.multi_lora.ref import multi_lora_reference  # noqa: F401

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for batched multi-adapter LoRA (BGMV)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def multi_lora_reference(x, a, b, task_ids, scale: float = 1.0):
+    """x: (N, din); a: (T, din, r); b: (T, r, dout); task_ids: (N,) int32.
+
+    Returns (N, dout): y[n] = scale * x[n] @ a[t[n]] @ b[t[n]]."""
+    a_sel = a[task_ids]                       # (N, din, r)
+    b_sel = b[task_ids]                       # (N, r, dout)
+    h = jnp.einsum("nd,ndr->nr", x.astype(jnp.float32),
+                   a_sel.astype(jnp.float32))
+    y = jnp.einsum("nr,nro->no", h, b_sel.astype(jnp.float32))
+    return (scale * y).astype(x.dtype)

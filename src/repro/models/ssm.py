@@ -1,0 +1,408 @@
+"""Recurrent mixers: Mamba-1 (Jamba) and xLSTM (mLSTM / sLSTM).
+
+Training/prefill paths are *chunked*: the sequence is split into CHUNK-token
+chunks; recurrent state crosses chunks through a ``lax.scan`` carry while the
+within-chunk math is parallel (associative scan for Mamba, decay-matrix
+attention form for mLSTM).  This bounds live memory to O(B * CHUNK * d * N)
+instead of O(B * S * d * N) — mandatory for 32k prefill / train backward.
+
+Decode paths are single-step recurrences over an explicit state pytree.
+
+The sequential references used by the tests live in tests/ (and the chunked
+forms are validated against step-by-step recurrences there).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+Array = jax.Array
+CHUNK = 256
+
+
+def _pick_chunk(S: int) -> int:
+    if S % CHUNK == 0:
+        return CHUNK
+    for c in (128, 64, 32, 16, 8, 4, 2, 1):
+        if S % c == 0:
+            return c
+    return 1
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Optional[Array]):
+    """Depthwise causal conv along seq.  x: (B,S,di); w: (K,di); b: (di,).
+
+    state: (B, K-1, di) trailing inputs from the previous segment (or None
+    for zero history).  Returns (y (B,S,di), new_state (B,K-1,di))."""
+    B, S, di = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, di), x.dtype)
+    xe = jnp.concatenate([state, x], axis=1)                   # (B, S+K-1, di)
+    # sum_k w[k] * x[t - (K-1) + k]
+    y = sum(xe[:, k : k + S, :] * w[k] for k in range(K)) + b
+    new_state = xe[:, S:, :] if K > 1 else state
+    return y, new_state
+
+
+# ===========================================================================
+# Mamba-1 (selective SSM)
+# ===========================================================================
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    di = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return di, dt_rank, cfg.mamba_d_state
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, dt_rank, N = mamba_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (cfg.mamba_d_conv, di), dtype, scale=0.1),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * N), dtype),
+        "dt_w": dense_init(ks[3], (dt_rank, di), dtype),
+        "dt_b": jnp.zeros((di,), jnp.float32) + jnp.log(jnp.expm1(0.01)),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def mamba_zero_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di, _, N = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+    }
+
+
+def _mamba_scan_inputs(p: dict, cfg: ModelConfig, x: Array, conv_state):
+    """Shared pre-scan compute.  Returns (dA, dBx, Cc, xs_conv, z, conv_state')."""
+    di, dt_rank, N = mamba_dims(cfg)
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs_conv, conv_state = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs_conv = jax.nn.silu(xs_conv)
+
+    dbc = xs_conv @ p["x_proj"]
+    dt = dbc[..., :dt_rank]
+    Bc = dbc[..., dt_rank : dt_rank + N].astype(jnp.float32)
+    Cc = dbc[..., dt_rank + N :].astype(jnp.float32)
+    dt = jax.nn.softplus((dt @ p["dt_w"]).astype(jnp.float32) + p["dt_b"])
+    A = -jnp.exp(p["A_log"])                                     # (di, N)
+
+    xcf = xs_conv.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * A)                              # (B,S,di,N)
+    dBx = (dt * xcf)[..., None] * Bc[:, :, None, :]              # (B,S,di,N)
+    return dA, dBx, Cc, xs_conv, z, conv_state
+
+
+def mamba_forward(p: dict, cfg: ModelConfig, x: Array,
+                  state: Optional[dict] = None, return_state: bool = False):
+    """x: (B,S,d) -> (y (B,S,d), new_state|None).  Chunked selective scan."""
+    B, S, d = x.shape
+    di, _, N = mamba_dims(cfg)
+    conv_state = state["conv"] if state is not None else None
+    h0 = state["h"] if state is not None else jnp.zeros((B, di, N), jnp.float32)
+
+    ck = _pick_chunk(S)
+    nc = S // ck
+
+    def big_einsum(states, C):
+        return jnp.einsum("bkdn,bkn->bkd", states, C)
+
+    # Pre-scan compute is done per-chunk inside the scan so the (B,ck,di,N)
+    # tensors never exist for more than one chunk at a time.
+    xr = x.reshape(B, nc, ck, d).transpose(1, 0, 2, 3)           # (nc,B,ck,d)
+
+    def body(carry, x_c):
+        h, conv_s = carry
+        dA, dBx, Cc, xs_conv, z, conv_s = _mamba_scan_inputs(p, cfg, x_c, conv_s)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        ca, cb = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        states = ca * h[:, None] + cb                            # (B,ck,di,N)
+        y = big_einsum(states, Cc)
+        y = y + p["D"] * xs_conv.astype(jnp.float32)
+        y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+        return (states[:, -1], conv_s), y
+
+    if state is None:
+        conv0 = jnp.zeros((B, cfg.mamba_d_conv - 1, di), x.dtype)
+    else:
+        conv0 = conv_state
+    (h_last, conv_last), ys = jax.lax.scan(body, (h0, conv0), xr)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, d)
+    new_state = {"conv": conv_last, "h": h_last} if return_state else None
+    return y, new_state
+
+
+def mamba_step(p: dict, cfg: ModelConfig, x1: Array, state: dict):
+    """Single-token decode.  x1: (B,1,d)."""
+    dA, dBx, Cc, xs_conv, z, conv_state = _mamba_scan_inputs(
+        p, cfg, x1, state["conv"])
+    h = dA[:, 0] * state["h"] + dBx[:, 0]                        # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])
+    y = y + p["D"] * xs_conv[:, 0].astype(jnp.float32)
+    y = (y.astype(x1.dtype) * jax.nn.silu(z[:, 0])) @ p["out_proj"]
+    return y[:, None, :], {"conv": conv_state, "h": h}
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix memory) — chunkwise-parallel training, recurrent decode
+# ===========================================================================
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    dh = di // cfg.n_heads
+    return di, dh
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (cfg.xlstm_conv, di), dtype, scale=0.1),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], (di, di), dtype),
+        "wk": dense_init(ks[3], (di, di), dtype),
+        "wv": dense_init(ks[4], (di, di), dtype),
+        "w_gates": dense_init(ks[5], (di, 2 * H), jnp.float32, scale=0.02),
+        "b_gates": jnp.concatenate([jnp.zeros((H,), jnp.float32),
+                                    jnp.full((H,), 3.0, jnp.float32)]),
+        "out_norm": jnp.ones((di,), dtype),
+        "down_proj": dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def mlstm_zero_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    return {
+        "conv": jnp.zeros((batch, cfg.xlstm_conv - 1, di), dtype),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),   # (v, k) layout
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_qkv_gates(p: dict, cfg: ModelConfig, x: Array, conv_state):
+    B, S, _ = x.shape
+    di, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    up = x @ p["up_proj"]
+    x_in, z = jnp.split(up, 2, axis=-1)
+    x_conv, conv_state = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_state)
+    x_conv = jax.nn.silu(x_conv)
+    q = (x_conv @ p["wq"]).reshape(B, S, H, dh)
+    k = (x_conv @ p["wk"]).reshape(B, S, H, dh) / math.sqrt(dh)
+    v = (x_in @ p["wv"]).reshape(B, S, H, dh)
+    gates = x_in.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    i_pre, f_pre = gates[..., :H], gates[..., H:]                 # (B,S,H)
+    f_pre = jax.nn.log_sigmoid(f_pre)                             # log forget gate
+    return q, k, v, i_pre, f_pre, z, conv_state
+
+
+def _mlstm_out(p: dict, cfg: ModelConfig, h: Array, z: Array) -> Array:
+    """h: (B,S,H,dh) fp32 -> (B,S,d)."""
+    from repro.models.layers import rms_norm
+    B, S, H, dh = h.shape
+    hf = h.reshape(B, S, H * dh)
+    hf = rms_norm(hf.astype(z.dtype), p["out_norm"], 1e-6)
+    return (hf * jax.nn.silu(z)) @ p["down_proj"]
+
+
+def mlstm_forward(p: dict, cfg: ModelConfig, x: Array,
+                  state: Optional[dict] = None, return_state: bool = False):
+    """Chunkwise-parallel mLSTM.  x: (B,S,d)."""
+    B, S, d = x.shape
+    di, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    ck = _pick_chunk(S)
+    nc = S // ck
+
+    if state is None:
+        state = mlstm_zero_state(cfg, B, x.dtype)
+
+    q, k, v, i_pre, f_pre, z, conv_last = _mlstm_qkv_gates(
+        p, cfg, x, state["conv"] if S >= 1 else None)
+
+    def to_chunks(t):  # (B,S,...) -> (nc,B,ck,...)
+        return t.reshape((B, nc, ck) + t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic, fc = to_chunks(i_pre), to_chunks(f_pre)
+
+    def body(carry, xs):
+        C0, n0, m0 = carry                                       # stabilized
+        qt, kt, vt, it, ft = xs                                  # (B,ck,...)
+        qf = qt.astype(jnp.float32)
+        kf = kt.astype(jnp.float32)
+        vf = vt.astype(jnp.float32)
+
+        b = jnp.cumsum(ft, axis=1)                               # (B,ck,H)
+        # running stabilizer u_t = max(m0, cummax(i_tau - b_tau))
+        g = it - b
+        u = jnp.maximum(m0[:, None], jax.lax.cummax(g, axis=1))  # (B,ck,H)
+        m = b + u                                                # m_t
+        decay_in = jnp.exp(b + m0[:, None] - m)                  # (B,ck,H)
+        # D'[t,tau] = exp(b_t - b_tau + i_tau - m_t), tau <= t
+        Dlog = (b[:, :, None] - b[:, None, :] + it[:, None, :]
+                - m[:, :, None])                                 # (B,t,tau,H)
+        tri = jnp.tril(jnp.ones((ck, ck), bool))
+        Dmat = jnp.where(tri[None, :, :, None], jnp.exp(Dlog), 0.0)
+
+        S_mat = jnp.einsum("bthd,bshd->btsh", qf, kf)            # (B,t,tau,H)
+        W = Dmat * S_mat
+        intra = jnp.einsum("btsh,bshd->bthd", W, vf)
+        inter = jnp.einsum("bthd,bhvd->bthv", qf, C0) * decay_in[..., None]
+        num = intra + inter                                      # (B,t,H,dh)
+
+        denom_intra = W.sum(axis=2)                              # (B,t,H)
+        denom_inter = jnp.einsum("bthd,bhd->bth", qf, n0) * decay_in
+        denom = denom_intra + denom_inter
+        h = num / jnp.maximum(jnp.abs(denom), jnp.exp(-m))[..., None]
+
+        # carry update to end of chunk
+        last_m = m[:, -1]                                        # (B,H)
+        bL = b[:, -1]                                            # (B,H)
+        w_tau = jnp.exp(bL[:, None] - b + it - last_m[:, None])  # (B,ck,H)
+        C1 = (jnp.exp(bL + m0 - last_m)[..., None, None] * C0
+              + jnp.einsum("bth,bthv,bthk->bhvk", w_tau, vf, kf))
+        n1 = (jnp.exp(bL + m0 - last_m)[..., None] * n0
+              + jnp.einsum("bth,bthk->bhk", w_tau, kf))
+        return (C1, n1, last_m), h
+
+    (C_f, n_f, m_f), hs = jax.lax.scan(
+        body, (state["C"], state["n"], state["m"]), (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+    y = _mlstm_out(p, cfg, h, z)
+    new_state = ({"conv": conv_last, "C": C_f, "n": n_f, "m": m_f}
+                 if return_state else None)
+    return y, new_state
+
+
+def mlstm_step(p: dict, cfg: ModelConfig, x1: Array, state: dict):
+    """Single-token decode.  x1: (B,1,d)."""
+    B = x1.shape[0]
+    di, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    q, k, v, i_pre, f_pre, z, conv_state = _mlstm_qkv_gates(
+        p, cfg, x1, state["conv"])
+    qf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    it, ft = i_pre[:, 0], f_pre[:, 0]                            # (B,H)
+
+    m0 = state["m"]
+    m1 = jnp.maximum(ft + m0, it)
+    i_s = jnp.exp(it - m1)
+    f_s = jnp.exp(ft + m0 - m1)
+    C1 = f_s[..., None, None] * state["C"] + i_s[..., None, None] * \
+        jnp.einsum("bhv,bhk->bhvk", vf, kf)
+    n1 = f_s[..., None] * state["n"] + i_s[..., None] * kf
+    num = jnp.einsum("bhvk,bhk->bhv", C1, qf)
+    denom = jnp.einsum("bhk,bhk->bh", n1, qf)
+    h = num / jnp.maximum(jnp.abs(denom), jnp.exp(-m1))[..., None]
+    y = _mlstm_out(p, cfg, h[:, None], z)
+    return y, {"conv": conv_state, "C": C1, "n": n1, "m": m1}
+
+
+# ===========================================================================
+# sLSTM (scalar memory, true nonlinear recurrence -> sequential scan)
+# ===========================================================================
+
+def slstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    ff = int(d * 4 / 3)
+    k_ff = jax.random.split(ks[3], 3)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype),
+        "r": dense_init(ks[1], (H, 4, dh, dh), jnp.float32, scale=1.0 / math.sqrt(dh)),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "out_norm": jnp.ones((d,), dtype),
+        "ffn": {
+            "w_gate": dense_init(k_ff[0], (d, ff), dtype),
+            "w_up": dense_init(k_ff[1], (d, ff), dtype),
+            "w_down": dense_init(k_ff[2], (ff, d), dtype),
+        },
+    }
+
+
+def slstm_zero_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p: dict, cfg: ModelConfig, pre: Array, state: dict):
+    """pre: (B, 4d) input projection for one step."""
+    B = pre.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    h_prev = state["h"].reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hgde->bghe", h_prev, p["r"])           # (B,4,H,dh)
+    rec = rec.reshape(B, 4 * d)
+    zif_o = pre.astype(jnp.float32) + rec + p["b"]
+    z_pre, i_pre, f_pre, o_pre = jnp.split(zif_o, 4, axis=-1)    # (B,d) each
+
+    f_log = jax.nn.log_sigmoid(f_pre)
+    m1 = jnp.maximum(f_log + state["m"], i_pre)
+    i_g = jnp.exp(i_pre - m1)
+    f_g = jnp.exp(f_log + state["m"] - m1)
+    c1 = f_g * state["c"] + i_g * jnp.tanh(z_pre)
+    n1 = f_g * state["n"] + i_g
+    h1 = jax.nn.sigmoid(o_pre) * c1 / jnp.maximum(n1, 1e-6)
+    return {"c": c1, "n": n1, "m": m1, "h": h1}
+
+
+def slstm_forward(p: dict, cfg: ModelConfig, x: Array,
+                  state: Optional[dict] = None, return_state: bool = False):
+    B, S, d = x.shape
+    if state is None:
+        state = slstm_zero_state(cfg, B, x.dtype)
+    pre = x @ p["w_in"]                                          # (B,S,4d)
+
+    def body(st, pre_t):
+        st1 = _slstm_cell(p, cfg, pre_t, st)
+        return st1, st1["h"]
+
+    state1, hs = jax.lax.scan(body, state, pre.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                        # (B,S,d)
+    from repro.models.layers import rms_norm, ffn_apply
+    h = rms_norm(h, p["out_norm"], 1e-6)
+    y = h + ffn_apply(p["ffn"], h)
+    return y, (state1 if return_state else None)
+
+
+def slstm_step(p: dict, cfg: ModelConfig, x1: Array, state: dict):
+    pre = (x1[:, 0] @ p["w_in"])
+    st1 = _slstm_cell(p, cfg, pre, state)
+    from repro.models.layers import rms_norm, ffn_apply
+    h = rms_norm(st1["h"].astype(x1.dtype), p["out_norm"], 1e-6)
+    y = h + ffn_apply(p["ffn"], h)
+    return y[:, None, :], st1

@@ -1,0 +1,86 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware constants (assignment-supplied, TPU v5e):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM per chip, ~50 GB/s/link ICI.
+
+Terms (seconds), per the assignment:
+  compute    = HLO_FLOPs / (chips * peak)          [cost_analysis is
+               per-partition on this backend, so we equivalently divide the
+               per-device FLOPs by one chip's peak]
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, float]
+    model_flops_total: float
+    peak_memory_per_device: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs summed over chips)."""
+        total_hlo = self.flops_per_device * self.chips
+        return self.model_flops_total / max(total_hlo, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at the
+        dominant-term time: (MODEL_FLOPS / chips / peak) / bound_time."""
+        ideal = self.model_flops_total / self.chips / PEAK_FLOPS
+        return ideal / max(self.bound_time, 1e-30)
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, dominant=self.dominant,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def summarize(r: Roofline) -> str:
+    return (f"{r.arch:22s} {r.shape:12s} {r.mesh:9s} "
+            f"comp={r.t_compute*1e3:9.3f}ms mem={r.t_memory*1e3:9.3f}ms "
+            f"coll={r.t_collective*1e3:9.3f}ms dom={r.dominant:10s} "
+            f"useful={r.useful_flops_ratio:6.3f} "
+            f"roofline={r.roofline_fraction*100:6.2f}%")

@@ -1,0 +1,84 @@
+"""Parse collective traffic out of (optimized) HLO text.
+
+``collective_bytes(hlo)`` builds a name->shape table from every definition
+line, then for each all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction sums the byte sizes of its *operands* (per the
+assignment's roofline recipe).  Returns per-kind byte totals and counts.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+"
+                     r"([\w\-]+)(?:\.[\d]+)?\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {kind: {"bytes": operand_bytes, "count": n}} plus "total"."""
+    shapes: Dict[str, str] = {}
+    col_lines = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        shapes[name] = shape_str
+        base_op = op
+        for kind in COLLECTIVES:
+            if base_op == kind or base_op.startswith(kind + "-start") or \
+               base_op == kind + "-start":
+                col_lines.append((kind, line, name))
+                break
+
+    out = defaultdict(lambda: {"bytes": 0.0, "count": 0})
+    seen_done = set()
+    for kind, line, name in col_lines:
+        # operand bytes: sum shapes of %refs on the RHS after the op name
+        rhs = line.split("=", 1)[1]
+        # drop the result-shape prefix
+        paren = rhs.find("(")
+        operand_str = rhs[paren + 1:]
+        byts = 0
+        for ref in _OPERAND_RE.findall(operand_str):
+            if ref in shapes:
+                byts += _shape_bytes(shapes[ref])
+        if byts == 0:
+            # fallback: result shape (e.g. operands inlined as constants)
+            byts = _shape_bytes(rhs[:paren])
+        out[kind]["bytes"] += byts
+        out[kind]["count"] += 1
+
+    total = {"bytes": sum(v["bytes"] for v in out.values()),
+             "count": sum(v["count"] for v in out.values())}
+    result = {k: dict(v) for k, v in out.items()}
+    result["total"] = total
+    return result

@@ -1,0 +1,71 @@
+"""Re-derive roofline records from archived HLO (no recompilation).
+
+  PYTHONPATH=src python -m repro.roofline.reanalyze [--raw experiments/raw]
+
+Reads every <tag>.hlo.zst, reruns the (possibly improved) text cost model,
+and rewrites the matching <tag>.json roofline fields in place.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import zstandard as zstd
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.models.config import model_flops
+from repro.roofline.analysis import Roofline, summarize
+from repro.roofline.hlo_cost import analyze
+
+
+def reanalyze_file(raw_dir: str, tag: str) -> dict:
+    with open(os.path.join(raw_dir, tag + ".hlo.zst"), "rb") as f:
+        hlo = zstd.ZstdDecompressor().decompress(f.read()).decode()
+    with open(os.path.join(raw_dir, tag + ".json")) as f:
+        rec = json.load(f)
+    hc = analyze(hlo)
+    cell = SHAPES[rec["shape"]]
+    n_tok = cell.global_batch * (1 if cell.kind == "decode" else
+                                 cell.seq_len)
+    mf = model_flops(get_config(rec["arch"]), n_tok,
+                     mode="train" if cell.kind == "train" else "serve")
+    rl = Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        chips=rec["chips"], flops_per_device=hc["flops"],
+        bytes_per_device=hc["bytes_hbm"],
+        collective_bytes_per_device=hc["collective_total"]["bytes"],
+        collective_breakdown={k: v["bytes"]
+                              for k, v in hc["collectives"].items()},
+        model_flops_total=mf,
+        peak_memory_per_device=rec["peak_memory_per_device"])
+    out = dict(rec)
+    out.update(rl.to_dict())
+    out["collective_ring_time"] = hc["collective_total"]["ring_time"]
+    out["collective_counts"] = {k: v["count"]
+                                for k, v in hc["collectives"].items()}
+    with open(os.path.join(raw_dir, tag + ".json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--raw", default="experiments/raw")
+    args = ap.parse_args()
+    tags = sorted(fn[:-8] for fn in os.listdir(args.raw)
+                  if fn.endswith(".hlo.zst"))
+    for tag in tags:
+        rec = reanalyze_file(args.raw, tag)
+        rl = Roofline(rec["arch"], rec["shape"], rec["mesh"], rec["chips"],
+                      rec["flops_per_device"], rec["bytes_per_device"],
+                      rec["collective_bytes_per_device"],
+                      rec["collective_breakdown"], rec["model_flops_total"],
+                      rec["peak_memory_per_device"])
+        print("RE  ", summarize(rl), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md tables from experiments/raw records.
+
+  PYTHONPATH=src python -m repro.roofline.report [--variant baseline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load(raw="experiments/raw"):
+    recs = []
+    for fn in sorted(os.listdir(raw)):
+        if fn.endswith(".json"):
+            recs.append(json.load(open(os.path.join(raw, fn))))
+    return recs
+
+
+def fmt_table(recs, mesh="16x16", variant="baseline"):
+    rows = [r for r in recs if r["mesh"] == mesh
+            and r.get("variant", "baseline") == variant]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | t_compute | t_memory | t_collective | dominant "
+           "| MODEL/HLO | roofline | HBM/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f}ms "
+            f"| {r['t_memory']*1e3:.1f}ms | {r['t_collective']*1e3:.1f}ms "
+            f"| {r['dominant']} | {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']*100:.3f}% "
+            f"| {r['peak_memory_per_device']/2**30:.1f}G |")
+    return "\n".join(out)
+
+
+def fmt_dryrun(recs, variant="baseline"):
+    rows = [r for r in recs if r.get("variant", "baseline") == variant]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = ["| arch | shape | mesh | HLO GFLOP/dev | HBM GB/dev | coll GB/dev"
+           " | coll ops | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        nops = sum(r.get("collective_counts", {}).values())
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['flops_per_device']/1e9:.0f} "
+            f"| {r['bytes_per_device']/1e9:.0f} "
+            f"| {r['collective_bytes_per_device']/1e9:.2f} "
+            f"| {nops:.0f} | {r.get('compile_s', 0):.0f} |")
+    return "\n".join(out)
+
+
+def fmt_variants(recs, arch, shape, mesh="16x16"):
+    rows = [r for r in recs if r["arch"] == arch and r["shape"] == shape
+            and r["mesh"] == mesh]
+    order = {"baseline": 0}
+    rows.sort(key=lambda r: order.get(r.get("variant", "baseline"), 1))
+    out = [f"**{arch} × {shape}** ({mesh}):", "",
+           "| variant | t_compute | t_memory | t_collective | dominant | "
+           "roofline | HBM/dev |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r.get('variant', 'baseline')} | {r['t_compute']*1e3:.1f}ms "
+            f"| {r['t_memory']*1e3:.1f}ms | {r['t_collective']*1e3:.1f}ms "
+            f"| {r['dominant']} | {r['roofline_fraction']*100:.3f}% "
+            f"| {r['peak_memory_per_device']/2**30:.1f}G |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="roofline",
+                    choices=["roofline", "dryrun", "variants"])
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    args = ap.parse_args()
+    recs = load()
+    if args.mode == "roofline":
+        print(fmt_table(recs, args.mesh, args.variant))
+    elif args.mode == "dryrun":
+        print(fmt_dryrun(recs, args.variant))
+    else:
+        print(fmt_variants(recs, args.arch, args.shape, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

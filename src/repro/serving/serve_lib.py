@@ -1,0 +1,79 @@
+"""Serving-step builders: prefill + decode with sharded KV/SSM caches.
+
+``serve_step`` (decode) consumes and produces the cache with identical
+shardings (donated), returning sampled token ids — the (B, vocab) logits
+never leave the device mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+from repro.sharding import rules as R
+
+
+def greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def make_prefill_fn(cfg: ModelConfig, *, moe_impl: str = "ep"):
+    def prefill_step(params, tokens, cache, cross_ctx=None):
+        logits, cache = MD.prefill(cfg, params, tokens, cache, cross_ctx,
+                                   moe_impl=moe_impl)
+        return greedy(logits), cache
+    return prefill_step
+
+
+def make_decode_fn(cfg: ModelConfig, *, moe_impl: str = "ep"):
+    def serve_step(params, tokens, cache):
+        logits, cache = MD.decode_step(cfg, params, tokens, cache,
+                                       moe_impl=moe_impl)
+        return greedy(logits), cache
+    return serve_step
+
+
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int):
+    params_shape = jax.eval_shape(
+        functools.partial(MD.init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = R.param_specs(cfg, params_shape, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    cache_shape = jax.eval_shape(
+        functools.partial(MD.init_cache, cfg, batch, max_seq))
+    cspecs = R.cache_specs(cfg, cache_shape, mesh)
+    csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+    tok_sh = NamedSharding(mesh, R.batch_spec(mesh, batch))
+    out = {"params_shape": params_shape, "param_sharding": psh,
+           "cache_shape": cache_shape, "cache_sharding": csh,
+           "tokens_sharding": tok_sh}
+    if cfg.cross_ctx_len:
+        dp = R.maybe(batch, R.batch_axes(mesh), mesh)
+        out["cross_sharding"] = NamedSharding(mesh, P(dp, None, None))
+    return out
+
+
+def build_serve_steps(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int,
+                      *, moe_impl: str = "ep", donate: bool = True):
+    sh = serve_shardings(cfg, mesh, batch, max_seq)
+    tok = sh["tokens_sharding"]
+
+    pre_in = [sh["param_sharding"], tok, sh["cache_sharding"]]
+    if cfg.cross_ctx_len:
+        pre_in.append(sh["cross_sharding"])
+    prefill = jax.jit(
+        make_prefill_fn(cfg, moe_impl=moe_impl), in_shardings=tuple(pre_in),
+        out_shardings=(None, sh["cache_sharding"]),
+        donate_argnums=(2,) if donate else ())
+
+    decode = jax.jit(
+        make_decode_fn(cfg, moe_impl=moe_impl),
+        in_shardings=(sh["param_sharding"], tok, sh["cache_sharding"]),
+        out_shardings=(None, sh["cache_sharding"]),
+        donate_argnums=(2,) if donate else ())
+    return prefill, decode, sh

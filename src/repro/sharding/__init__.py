@@ -1,0 +1,1 @@
+from repro.sharding.ctx import constrain, sharding_rules, current_rules  # noqa: F401

@@ -1,0 +1,44 @@
+"""Activation-sharding context.
+
+Model code calls ``constrain(x, "act.hidden")`` at layer boundaries.  Outside
+a mesh context this is the identity, so unit tests and single-device runs are
+unaffected; launchers install a rule table (logical name -> PartitionSpec)
+plus a mesh, and the constraint lowers to
+``jax.lax.with_sharding_constraint`` — the hook GSPMD needs to keep
+activations on the intended axes at 512-device scale.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None), getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Mesh, rules: Dict[str, P]):
+    prev = current_rules()
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def constrain(x, name: str):
+    rules, mesh = current_rules()
+    if rules is None or mesh is None or name not in rules:
+        return x
+    spec = rules[name]
+    # Trim the spec to the array rank (specs are written for full-rank acts).
+    spec = P(*spec[: x.ndim]) if len(spec) > x.ndim else spec
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

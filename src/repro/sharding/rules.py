@@ -1,0 +1,245 @@
+"""Partition-spec rules: map every param / cache / activation leaf to a
+PartitionSpec over the production mesh.
+
+Strategy (baseline — see EXPERIMENTS.md §Perf for hillclimbed variants):
+  * 2-D weight sharding (ZeRO-3-style): each matrix shards one dim over
+    "data" (FSDP) and, where divisible, its TP-natural dim over "model".
+  * batch over ("pod","data"); residual activations replicated over "model".
+  * MoE experts over "model" (EP); expert matrices additionally over "data".
+  * KV caches: batch over "data"; heads over "model" when divisible, else
+    sequence over "model" (SP) so 32k/500k caches fit per-chip HBM.
+  * dims that do not divide an axis are replicated (``maybe``) — e.g.
+    smollm's 15 heads.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return mesh.shape[name]
+
+
+def maybe(dim: int, axis, mesh: Mesh):
+    """Return ``axis`` if ``dim`` is divisible by its size, else None."""
+    if axis is None:
+        return None
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def batch_axes(mesh: Mesh):
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes if len(axes) > 1 else axes[0]
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                cfg: ModelConfig) -> P:
+    dp = "data" if "data" in mesh.axis_names else None
+    mp = "model"
+    stacked = path.split("/")[0].startswith(("g", "enc_g")) and \
+        path.split("/")[0] not in ("final_norm",)
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+
+    def out(*spec):
+        return P(*(lead + tuple(spec)))
+
+    last = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    if len(body) <= 1:
+        return out(*([None] * len(body)))
+
+    # --- embeddings / head ---------------------------------------------------
+    if last == "embed":
+        return P(maybe(shape[0], mp, mesh), maybe(shape[1], dp, mesh))
+    if last == "lm_head":
+        return P(maybe(shape[0], dp, mesh), maybe(shape[1], mp, mesh))
+
+    # --- MoE -----------------------------------------------------------------
+    if parent == "moe" or (parent == "shared" and "moe" in path):
+        if last == "router":
+            return out(None, None)  # replicated: read inside shard_map EP
+        if last in ("w_gate", "w_up", "w_down"):
+            if len(body) == 3:
+                # expert-stacked: EP over "model" on E, FSDP over "data" on
+                # the f dim (w_gate/w_up: (E,d,f); w_down: (E,f,d)); the EP
+                # shard_map all-gathers the f shards per layer (ZeRO-3).
+                if last == "w_down":
+                    return out(maybe(body[0], mp, mesh),
+                               maybe(body[1], dp, mesh), None)
+                return out(maybe(body[0], mp, mesh), None,
+                           maybe(body[2], dp, mesh))
+            if last == "w_down":  # shared expert (fs, d)
+                return out(maybe(body[0], mp, mesh), maybe(body[1], dp, mesh))
+            return out(maybe(body[0], dp, mesh), maybe(body[1], mp, mesh))
+
+    # --- attention -----------------------------------------------------------
+    if parent == "attn":
+        if last in ("wq",):
+            ok = cfg.n_heads % _axis_size(mesh, mp) == 0
+            return out(maybe(body[0], dp, mesh), mp if ok else None)
+        if last in ("wk", "wv"):
+            ok = cfg.n_kv_heads % _axis_size(mesh, mp) == 0
+            return out(maybe(body[0], dp, mesh), mp if ok else None)
+        if last == "wo":
+            ok = cfg.n_heads % _axis_size(mesh, mp) == 0
+            return out(mp if ok else None, maybe(body[1], dp, mesh))
+
+    # --- MLA -----------------------------------------------------------------
+    if parent == "mla":
+        if cfg.shard_variant == "mla_tp":
+            # §Perf fix: never shard a contraction dim over "model" — the
+            # baseline wq_b (q_lora x model) forced a psum of the full
+            # (B,S,H*(nh+rh)) q tensor every layer (~380GB/step on
+            # deepseek train_4k).  Head-shard outputs instead.
+            if last == "wq_a":
+                return out(maybe(body[0], dp, mesh), None)
+            if last == "wq_b":
+                ok = cfg.n_heads % _axis_size(mesh, mp) == 0
+                return out(maybe(body[0], dp, mesh), mp if ok else None)
+            if last == "wkv_a":
+                return out(maybe(body[0], dp, mesh), None)
+        if last == "wq_a":
+            return out(maybe(body[0], dp, mesh), maybe(body[1], mp, mesh))
+        if last == "wq_b":
+            return out(maybe(body[0], mp, mesh), maybe(body[1], dp, mesh))
+        if last == "wkv_a":
+            return out(maybe(body[0], dp, mesh), maybe(body[1], mp, mesh))
+        if last in ("wk_b", "wv_b"):   # (H, r, hd)
+            return out(maybe(body[0], mp, mesh), None, None)
+        if last == "wo":
+            return out(maybe(body[0], mp, mesh), maybe(body[1], dp, mesh))
+
+    # --- dense FFN -------------------------------------------------------------
+    if parent == "ffn":
+        if last == "w_down":
+            return out(maybe(body[0], mp, mesh), maybe(body[1], dp, mesh))
+        return out(maybe(body[0], dp, mesh), maybe(body[1], mp, mesh))
+
+    # --- mamba -----------------------------------------------------------------
+    if parent == "mamba":
+        di = cfg.mamba_expand * cfg.d_model
+        if last == "in_proj":
+            return out(maybe(body[0], dp, mesh), maybe(body[1], mp, mesh))
+        if last == "conv_w":
+            return out(None, maybe(body[1], mp, mesh))
+        if last == "x_proj":
+            return out(maybe(body[0], mp, mesh), None)
+        if last == "dt_w":
+            return out(None, maybe(body[1], mp, mesh))
+        if last == "A_log":
+            return out(maybe(body[0], mp, mesh), None)
+        if last == "out_proj":
+            return out(maybe(body[0], mp, mesh), maybe(body[1], dp, mesh))
+
+    # --- xLSTM blocks: small model — DP-shard the largest dim only -------------
+    if parent in ("mlstm", "slstm") or "mlstm" in path or "slstm" in path:
+        big = max(range(len(body)), key=lambda i: body[i])
+        spec = [None] * len(body)
+        spec[big] = maybe(body[big], dp, mesh)
+        return out(*spec)
+
+    # --- fallback: FSDP over the largest divisible dim ---------------------------
+    big = max(range(len(body)), key=lambda i: body[i])
+    spec = [None] * len(body)
+    spec[big] = maybe(body[big], dp, mesh)
+    return out(*spec)
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh: Mesh):
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        specs.append(_param_spec(pstr, leaf.shape, mesh, cfg))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+def _cache_spec(path: str, shape, mesh: Mesh, cfg: ModelConfig) -> P:
+    if path == "pos":
+        return P()
+    dp = batch_axes(mesh)
+    mp = "model"
+    body = shape[1:]  # strip the stacked repeats dim
+    last = path.split("/")[-1]
+
+    def out(*spec):
+        return P(*((None,) + tuple(spec)))
+
+    if last in ("k", "v"):            # (B, S, Hkv, hd)
+        if cfg.n_kv_heads % _axis_size(mesh, mp) == 0:
+            return out(maybe(body[0], dp, mesh), None, mp, None)
+        return out(maybe(body[0], dp, mesh), maybe(body[1], mp, mesh),
+                   None, None)
+    if last in ("ck", "cv"):          # (B, Lc, Hkv, hd)
+        return out(maybe(body[0], dp, mesh), None, None, None)
+    if last == "ckv":                 # (B, S, r): flash-decode style — seq
+        # over "model" so softmax reduces via tiny stat all-reduces and the
+        # 32k latent cache shards 1/|model| per chip.
+        return out(maybe(body[0], dp, mesh), maybe(body[1], mp, mesh), None)
+    if last == "krope":               # (B, S, rh)
+        return out(maybe(body[0], dp, mesh), maybe(body[1], mp, mesh), None)
+    if last == "conv":                # (B, K-1, di)
+        return out(maybe(body[0], dp, mesh), None, maybe(body[2], mp, mesh))
+    if last == "h" and len(body) == 3:  # mamba state (B, di, N)
+        return out(maybe(body[0], dp, mesh), maybe(body[1], mp, mesh), None)
+    # xLSTM states and anything else: batch-shard only
+    spec = [None] * len(body)
+    if body:
+        spec[0] = maybe(body[0], dp, mesh)
+    return out(*spec)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        # strip group/block prefixes: g0/b1/k -> k has stacked lead dim
+        if pstr == "pos":
+            specs.append(P())
+        else:
+            specs.append(_cache_spec(pstr, leaf.shape, mesh, cfg))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# activation / batch rules
+# ---------------------------------------------------------------------------
+
+def act_rules(mesh: Mesh, batch: Optional[int] = None) -> Dict[str, P]:
+    dp = batch_axes(mesh)
+    if batch is not None:
+        dp = maybe(batch, dp, mesh)
+    return {"act.res": P(dp, None, None)}
+
+
+def batch_spec(mesh: Mesh, batch: Optional[int] = None) -> P:
+    dp = batch_axes(mesh)
+    if batch is not None:
+        dp = maybe(batch, dp, mesh)
+    return P(dp, None)

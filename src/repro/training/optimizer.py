@@ -1,0 +1,74 @@
+"""AdamW in plain JAX (no optax dependency), with global-norm clipping.
+
+Optimizer state (m, v in fp32) mirrors the param tree, so the same partition
+specs apply — ZeRO-3: every state shard lives with its weight shard.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: OptState):
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = _schedule(cfg, state.step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m1 = cfg.b1 * m + (1 - cfg.b1) * g
+        v1 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m1 / (1 - cfg.b1 ** step)
+        vhat = v1 / (1 - cfg.b2 ** step)
+        pf = p.astype(jnp.float32)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + decay * pf)
+        return pf.astype(p.dtype), m1, v1
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(step, new_m, new_v), {"grad_norm": gnorm,
+                                                      "lr": lr}

@@ -1,0 +1,77 @@
+"""Distributed train-step builder.
+
+``build_train_step`` returns a jit'd step with in/out shardings derived from
+the rules in ``repro.sharding.rules``; used by the launcher, the dry-run, and
+the 100M-model training example alike.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+from repro.sharding import rules as R
+from repro.sharding.ctx import sharding_rules
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update, \
+    init_opt_state
+
+
+def make_step_fn(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                 moe_impl: str = "gshard", remat: bool = True):
+    def train_step(params, opt_state, tokens, labels, cross_ctx=None):
+        def lf(p):
+            return MD.loss_fn(cfg, p, tokens, labels, cross_ctx,
+                              moe_impl=moe_impl, remat=remat)
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params2, opt_state2, om = adamw_update(opt_cfg, params, grads,
+                                               opt_state)
+        metrics = dict(metrics, loss=loss, **om)
+        return params2, opt_state2, metrics
+    return train_step
+
+
+def shardings_for(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
+                  with_cross: bool):
+    """Returns (params_shapes, param_sharding, opt_sharding, arg_shardings)."""
+    params_shape = jax.eval_shape(
+        functools.partial(MD.init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = R.param_specs(cfg, params_shape, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    opt_shape = jax.eval_shape(init_opt_state, params_shape)
+    osh = OptState(step=NamedSharding(mesh, P()), m=psh, v=psh)
+    bsp = NamedSharding(mesh, R.batch_spec(mesh, batch or None))
+    out = {"params_shape": params_shape, "param_sharding": psh,
+           "opt_sharding": osh, "tokens_sharding": bsp}
+    if with_cross:
+        dp = R.maybe(batch, R.batch_axes(mesh), mesh) if batch else \
+            R.batch_axes(mesh)
+        out["cross_sharding"] = NamedSharding(mesh, P(dp, None, None))
+    return out
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh,
+                     opt_cfg: Optional[AdamWConfig] = None, *,
+                     batch: int = 0, moe_impl: str = "ep", remat: bool = True,
+                     donate: bool = True):
+    """Returns (jitted_step, shardings dict).  The jitted step must be called
+    under ``sharding_rules(mesh, act_rules(mesh))`` (the launcher does this)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    step = make_step_fn(cfg, opt_cfg, moe_impl=moe_impl, remat=remat)
+    with_cross = cfg.cross_ctx_len > 0
+    sh = shardings_for(cfg, mesh, batch, 0, with_cross)
+
+    in_sh = [sh["param_sharding"], sh["opt_sharding"],
+             sh["tokens_sharding"], sh["tokens_sharding"]]
+    if with_cross:
+        in_sh.append(sh["cross_sharding"])
+    out_sh = (sh["param_sharding"], sh["opt_sharding"], None)
+
+    jitted = jax.jit(step, in_shardings=tuple(in_sh), out_shardings=out_sh,
+                     donate_argnums=(0, 1) if donate else ())
+    return jitted, sh

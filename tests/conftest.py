@@ -1,0 +1,14 @@
+# NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
+# benches must see the real single device; only launch/dryrun.py forces 512.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

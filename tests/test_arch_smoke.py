@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests (assignment deliverable f): reduced config,
+one forward + train grad + prefill/decode consistency, asserting shapes and
+finiteness on CPU.  Full configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced, list_archs
+from repro.configs.shapes import SHAPES, applicable
+from repro.models import model as MD
+from repro.models.config import param_count
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_prefill_decode(arch):
+    cfg = get_reduced(arch).replace(dtype="float32",
+                                    moe_capacity_factor=64.0)
+    params = MD.init_params(cfg, KEY)
+    B, Sq, MS = 2, 12, 24
+    toks = jax.random.randint(KEY, (B, Sq), 0, cfg.vocab_size)
+    cross = None
+    if cfg.cross_ctx_len:
+        cross = jax.random.normal(KEY, (B, cfg.cross_ctx_len, cfg.d_model))
+
+    logits, aux = MD.forward(cfg, params, toks, cross)
+    assert logits.shape == (B, Sq, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+    cache = MD.init_cache(cfg, B, MS)
+    lg_pre, cache = MD.prefill(cfg, params, toks[:, :Sq - 1], cache, cross)
+    lg_dec, cache = MD.decode_step(cfg, params, toks[:, Sq - 1:], cache)
+    assert int(cache["pos"]) == Sq
+    np.testing.assert_allclose(lg_pre, logits[:, Sq - 2], atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(lg_dec, logits[:, Sq - 1], atol=1e-4,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_grad_finite(arch):
+    cfg = get_reduced(arch)
+    params = MD.init_params(cfg, KEY)
+    B, Sq = 2, 8
+    toks = jax.random.randint(KEY, (B, Sq), 0, cfg.vocab_size)
+    cross = None
+    if cfg.cross_ctx_len:
+        cross = jax.random.normal(
+            KEY, (B, cfg.cross_ctx_len, cfg.d_model), jnp.dtype(cfg.dtype))
+
+    def lf(p):
+        total, _ = MD.loss_fn(cfg, p, toks, toks, cross, remat=True)
+        return total
+
+    loss, grads = jax.value_and_grad(lf)(params)
+    assert bool(jnp.isfinite(loss))
+    assert np.log(cfg.vocab_size) * 0.3 < float(loss) < \
+        np.log(cfg.vocab_size) * 3
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "deepseek-v2-236b": (60, 5120, 128, 128, 102400),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 151936),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 128256),
+        "qwen3-1.7b": (28, 2048, 16, 8, 151936),
+        "llama3.2-1b": (16, 2048, 32, 8, 128256),
+        "smollm-360m": (32, 960, 15, 5, 49152),
+        "glm4-9b": (40, 4096, 32, 2, 151552),
+        "whisper-tiny": (8, 384, 6, 6, 51865),   # 4 enc + 4 dec
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 65536),
+        "xlstm-350m": (24, 1024, 4, 4, 50304),
+    }[arch]
+    n_blocks = cfg.n_blocks + cfg.n_encoder_blocks
+    if arch == "whisper-tiny":
+        n_blocks = cfg.n_encoder_blocks + cfg.n_blocks // 2  # dec pairs
+    assert (n_blocks, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.vocab_size) == expected
+
+
+def test_param_counts_near_published():
+    totals = {
+        "deepseek-v2-236b": 236e9, "qwen3-moe-235b-a22b": 235e9,
+        "jamba-v0.1-52b": 52e9,
+    }
+    for arch, want in totals.items():
+        n = param_count(get_config(arch))
+        assert abs(n - want) / want < 0.05, (arch, n)
+
+
+def test_long_500k_applicability():
+    subq = {a for a in list_archs() if applicable(a, "long_500k")}
+    assert subq == {"jamba-v0.1-52b", "xlstm-350m"}
+    for a in list_archs():
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert applicable(a, s)

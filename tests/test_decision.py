@@ -1,0 +1,193 @@
+"""Decision engine: crisp/fuzzy evaluation, Algorithm 1 strategies,
+Proposition-1 functional completeness (hypothesis), De Morgan laws, logic
+analyses, and the JAX batch evaluator vs the python oracle."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.decision import (DecisionEngine, and_, build_batch_evaluator,
+                                 confidence, coverage_analysis, eval_crisp,
+                                 eval_fuzzy, from_truth_table, leaf, nand_,
+                                 nor_, not_, or_, subsumes, xor_)
+from repro.core.types import Decision, ModelRef, SignalKey, SignalMatch, \
+    SignalResult
+
+KEYS = [SignalKey("keyword", f"s{i}") for i in range(4)]
+
+
+def sig_result(bits, confs=None):
+    s = SignalResult()
+    for i, k in enumerate(KEYS[: len(bits)]):
+        c = confs[i] if confs else (1.0 if bits[i] else 0.0)
+        s.add(SignalMatch(k, bool(bits[i]), c))
+    return s
+
+
+def L(i):
+    return leaf("keyword", f"s{i}")
+
+
+def test_basic_ops():
+    s = sig_result([1, 0, 1])
+    assert eval_crisp(and_(L(0), L(2)), s)
+    assert not eval_crisp(and_(L(0), L(1)), s)
+    assert eval_crisp(or_(L(1), L(2)), s)
+    assert eval_crisp(not_(L(1)), s)
+    assert eval_crisp(nor_(L(1)), s)
+    assert eval_crisp(nand_(L(0), L(1)), s)
+    assert eval_crisp(xor_(L(0), L(1)), s)
+    assert not eval_crisp(xor_(L(0), L(2)), s)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 3), st.data())
+def test_minterm_completeness(n, data):
+    """Proposition 1: any truth table is realizable by one rule node."""
+    table = [data.draw(st.integers(0, 1)) for _ in range(2 ** n)]
+    node = from_truth_table(KEYS[:n], table)
+    for row in range(2 ** n):
+        bits = [(row >> (n - 1 - i)) & 1 for i in range(n)]
+        assert eval_crisp(node, sig_result(bits)) == bool(table[row]), \
+            (table, bits)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(0, 1), min_size=2, max_size=2))
+def test_fuzzy_reduces_to_crisp_and_demorgan(confs):
+    # binary confidences -> fuzzy == crisp
+    bits = [1 if c >= 0.5 else 0 for c in confs]
+    s_bin = sig_result(bits)
+    for node in (and_(L(0), L(1)), or_(L(0), L(1)), not_(L(0)),
+                 xor_(L(0), L(1))):
+        assert eval_fuzzy(node, s_bin) == float(eval_crisp(node, s_bin))
+    # De Morgan over continuous confidences
+    s = sig_result([1, 1], confs)
+    lhs = eval_fuzzy(not_(and_(L(0), L(1))), s)
+    rhs = eval_fuzzy(or_(not_(L(0)), not_(L(1))), s)
+    assert abs(lhs - rhs) < 1e-9
+    lhs = eval_fuzzy(not_(or_(L(0), L(1))), s)
+    rhs = eval_fuzzy(and_(not_(L(0)), not_(L(1))), s)
+    assert abs(lhs - rhs) < 1e-9
+
+
+def test_fuzzy_prefers_confident_partial_match():
+    """§4.6: (0.99, 0.98) AND beats (0.95, 0.88, 0.72) AND."""
+    s = SignalResult()
+    for i, c in enumerate([0.95, 0.88, 0.72, 0.99, 0.98]):
+        s.add(SignalMatch(SignalKey("keyword", f"s{i}"), True, c))
+    d3 = and_(L(0), L(1), L(2))
+    d2 = and_(L(3), leaf("keyword", "s4"))
+    assert eval_fuzzy(d2, s) > eval_fuzzy(d3, s)
+    assert abs(eval_fuzzy(d3, s) - 0.72) < 1e-9
+
+
+def test_engine_priority_and_confidence():
+    d_lo = Decision("lo", L(0), [ModelRef("a")], priority=1)
+    d_hi = Decision("hi", L(1), [ModelRef("b")], priority=10)
+    s = sig_result([1, 1], [0.9, 0.3])
+    eng = DecisionEngine([d_lo, d_hi], strategy="priority")
+    assert eng.evaluate(s).decision.name == "hi"
+    eng = DecisionEngine([d_lo, d_hi], strategy="confidence")
+    assert eng.evaluate(s).decision.name == "lo"
+    # tie on priority -> insertion order
+    d2 = Decision("lo2", L(1), [ModelRef("c")], priority=1)
+    eng = DecisionEngine([d_lo, d2], strategy="priority")
+    assert eng.evaluate(s).decision.name == "lo"
+
+
+def test_engine_no_match():
+    eng = DecisionEngine([Decision("d", L(0), [ModelRef("a")])])
+    res = eng.evaluate(sig_result([0]))
+    assert res.decision is None and res.confidence == 0.0
+
+
+def test_confidence_mean_over_satisfied():
+    s = sig_result([1, 1, 0], [0.8, 0.6, 0.9])
+    assert abs(confidence(or_(L(0), L(1), L(2)), s) - 0.7) < 1e-9
+
+
+def test_coverage_and_conflicts():
+    ds = [Decision("a", L(0), [ModelRef("m1")], priority=1),
+          Decision("b", not_(L(0)), [ModelRef("m2")], priority=1)]
+    cov = coverage_analysis(ds)
+    assert cov["dead_zones"] == 0 and not cov["conflicts"]
+    ds2 = [Decision("a", L(0), [ModelRef("m1")], priority=1),
+           Decision("b", L(0), [ModelRef("m2")], priority=1)]
+    cov2 = coverage_analysis(ds2)
+    assert cov2["dead_zones"] == 1       # s0=0 unmatched
+    assert cov2["conflicts"]             # s0=1: equal priority, diff pools
+
+
+def test_subsumption():
+    assert subsumes(and_(L(0), L(1)), L(0))        # stricter implies looser
+    assert not subsumes(L(0), and_(L(0), L(1)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_batch_evaluator_matches_python(data):
+    n = 3
+    n_dec = data.draw(st.integers(1, 4))
+    decisions = []
+    for i in range(n_dec):
+        table = [data.draw(st.integers(0, 1)) for _ in range(2 ** n)]
+        node = from_truth_table(KEYS[:n], table)
+        decisions.append(Decision(f"d{i}", node, [ModelRef("m")],
+                                  priority=data.draw(st.integers(0, 5))))
+    evaluate, keys = build_batch_evaluator(decisions)
+    eng = DecisionEngine(decisions, strategy="priority")
+
+    rows = list(itertools.product([0, 1], repeat=n))
+    match = np.array(rows, np.float32)
+    conf = match * 0.8
+    # evaluator keys cover only referenced signals; project columns onto them
+    kl = [str(k) for k in KEYS[:n]]
+    m2 = np.zeros((len(rows), len(keys)), np.float32)
+    c2 = np.zeros((len(rows), len(keys)), np.float32)
+    for j, kname in enumerate(keys):
+        i = kl.index(kname)
+        m2[:, j] = match[:, i]
+        c2[:, j] = conf[:, i]
+    idx, c = evaluate(m2, c2)
+    for row_i, bits in enumerate(rows):
+        res = eng.evaluate(sig_result(list(bits),
+                                      [0.8 * b for b in bits]))
+        want = -1 if res.decision is None else \
+            [d.name for d in decisions].index(res.decision.name)
+        assert int(idx[row_i]) == want, (bits, want, int(idx[row_i]))
+
+
+def test_entropy_folding_monotone():
+    """§4.9: U_{l+1} <= U_l under any gate sequence (chain rule)."""
+    rng = np.random.RandomState(0)
+    # joint distribution over (model, gate outcomes): simulate priority gates
+    n_gates = 4
+    samples = rng.randint(0, 2, size=(4096, n_gates))
+    model = np.full(len(samples), n_gates)          # default
+    for g in range(n_gates - 1, -1, -1):            # priority: earlier wins
+        model[samples[:, g] == 1] = g
+
+    def H(labels):
+        _, counts = np.unique(labels, return_counts=True)
+        p = counts / counts.sum()
+        return -(p * np.log2(p)).sum()
+
+    def cond_H(model, obs):
+        # H(M | Z_{1:l}) over empirical joint
+        total = 0.0
+        keys = {}
+        for i in range(len(model)):
+            keys.setdefault(tuple(obs[i]), []).append(model[i])
+        for k, ms in keys.items():
+            total += len(ms) / len(model) * H(np.asarray(ms))
+        return total
+
+    prev = H(model)
+    for l in range(1, n_gates + 1):
+        u = cond_H(model, samples[:, :l])
+        assert u <= prev + 1e-9
+        prev = u
+    assert prev < 1e-9   # fully determined after all gates

@@ -1,0 +1,163 @@
+"""DSL: parse/compile goldens, three-level validation, block recovery,
+round-trip fixed point (incl. a hypothesis-generated config sweep)."""
+
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.decision import and_, leaf, not_, or_
+from repro.core.dsl import (compile_source, decompile, emit_crd, emit_helm,
+                            emit_yaml, parse, validate)
+from repro.core.dsl.compiler import compile_program
+from repro.core.dsl.emit import config_to_dict
+from repro.core.types import Decision, Endpoint, ModelProfile, ModelRef, \
+    RouterConfig
+
+GOLDEN = '''
+SIGNAL domain math { mmlu_categories: ["math"] }
+SIGNAL keyword urgent { operator: "any", keywords: ["urgent", "asap"] }
+PLUGIN safe_pii pii { enabled: true, pii_types_allowed: [] }
+ROUTE math_route (description = "Math") {
+  PRIORITY 100
+  WHEN domain("math")
+  MODEL "qwen2.5:3b" (reasoning = true, effort = "high")
+  PLUGIN safe_pii
+}
+ROUTE urgent_ai {
+  PRIORITY 200
+  WHEN keyword("urgent") AND NOT domain("math")
+  MODEL "qwen3:70b" (reasoning = true), "qwen2.5:3b"
+  ALGORITHM confidence { threshold: 0.5 }
+}
+BACKEND vllm_endpoint ollama { address: "127.0.0.1", port: 11434 }
+GLOBAL { default_model: "qwen2.5:3b", strategy: "priority" }
+'''
+
+
+def test_golden_compile():
+    cfg, diags = compile_source(GOLDEN)
+    assert not [d for d in diags if d.level == 1]
+    assert [d.name for d in cfg.decisions] == ["math_route", "urgent_ai"]
+    d = cfg.decisions[1]
+    assert d.priority == 200 and d.algorithm == "confidence"
+    assert d.rule.op == "and"
+    assert [m.name for m in d.model_refs] == ["qwen3:70b", "qwen2.5:3b"]
+    assert cfg.decisions[0].model_refs[0].reasoning
+    assert cfg.decisions[0].plugins["pii"]["pii_types_allowed"] == []
+    assert cfg.endpoints[0].port == 11434
+    assert cfg.default_model == "qwen2.5:3b"
+
+
+def test_round_trip_fixed_point():
+    cfg, _ = compile_source(GOLDEN)
+    src2 = decompile(cfg)
+    cfg2, _ = compile_source(src2)
+    assert json.dumps(config_to_dict(cfg), sort_keys=True) == \
+        json.dumps(config_to_dict(cfg2), sort_keys=True)
+    # double round-trip (idempotency)
+    src3 = decompile(cfg2)
+    assert src2 == src3
+
+
+def test_emitters():
+    cfg, _ = compile_source(GOLDEN)
+    y = emit_yaml(cfg)
+    assert "decisions:" in y and "math_route" in y
+    crd = emit_crd(cfg)
+    assert "apiVersion: vllm.ai/v1alpha1" in crd
+    assert "kind: SemanticRouter" in crd and "vllmEndpoints:" in crd
+    helm = emit_helm(cfg)
+    assert helm.startswith("config:")
+
+
+def test_block_recovery():
+    broken = GOLDEN.replace('WHEN domain("math")', 'WHEN domain(math', 1)
+    prog = parse(broken)
+    assert [r.name for r in prog.routes] == ["urgent_ai"]
+    assert any(d.level == 1 for d in prog.diagnostics)
+
+
+def test_level2_quickfix():
+    bad = GOLDEN.replace('keyword("urgent")', 'keyword("urgnt")')
+    _, diags = compile_source(bad, strict=False)
+    w = [d for d in diags if d.level == 2]
+    assert w and w[0].quickfix == "urgent"
+
+
+def test_level3_constraints():
+    bad = GOLDEN.replace("port: 11434", "port: 99999") \
+                .replace("PRIORITY 100", "PRIORITY -5") \
+                .replace("threshold: 0.5", "threshold: 7.5")
+    _, diags = compile_source(bad, strict=False)
+    msgs = " | ".join(str(d) for d in diags if d.level == 3)
+    assert "port" in msgs and "negative priority" in msgs
+
+
+def test_unknown_algorithm_suggestion():
+    bad = GOLDEN.replace("ALGORITHM confidence", "ALGORITHM thmpson")
+    _, diags = compile_source(bad, strict=False)
+    hits = [d for d in diags if d.level == 3 and d.quickfix == "thompson"]
+    assert hits
+
+
+def test_nested_boolean_precedence():
+    src = '''
+SIGNAL keyword a { keywords: ["a"] }
+SIGNAL keyword b { keywords: ["b"] }
+SIGNAL keyword c { keywords: ["c"] }
+ROUTE r { PRIORITY 1
+  WHEN keyword("a") OR keyword("b") AND NOT keyword("c")
+  MODEL "m" }
+GLOBAL { default_model: "m" }
+'''
+    cfg, _ = compile_source(src)
+    rule = cfg.decisions[0].rule           # OR(a, AND(b, NOT c))
+    assert rule.op == "or"
+    assert rule.children[0].op == "leaf"
+    assert rule.children[1].op == "and"
+    assert rule.children[1].children[1].op == "not"
+
+
+# ---------------------------------------------------------------------------
+# property: random RouterConfigs survive decompile -> compile
+# ---------------------------------------------------------------------------
+
+names = st.from_regex(r"[a-z][a-z0-9_]{0,8}", fullmatch=True)
+
+
+@st.composite
+def rule_nodes(draw, depth=0):
+    if depth >= 2 or draw(st.booleans()):
+        return leaf(draw(st.sampled_from(["keyword", "domain", "embedding"])),
+                    draw(names))
+    op = draw(st.sampled_from(["and", "or", "not"]))
+    if op == "not":
+        return not_(draw(rule_nodes(depth + 1)))
+    kids = draw(st.lists(rule_nodes(depth + 1), min_size=2, max_size=3))
+    return and_(*kids) if op == "and" else or_(*kids)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_decompile_compile_property(data):
+    n_dec = data.draw(st.integers(1, 3))
+    decisions = []
+    for i in range(n_dec):
+        decisions.append(Decision(
+            name=f"d{i}", rule=data.draw(rule_nodes()),
+            model_refs=[ModelRef(data.draw(names),
+                                 weight=float(data.draw(
+                                     st.sampled_from([1.0, 2.0]))))],
+            priority=data.draw(st.integers(0, 100)),
+            algorithm=data.draw(st.sampled_from(["static", "elo", "knn"])),
+        ))
+    cfg = RouterConfig(
+        decisions=decisions,
+        endpoints=[Endpoint("e0", "vllm", port=8000)],
+        default_model="m0")
+    src = decompile(cfg)
+    cfg2, diags = compile_source(src, strict=True)
+    a = json.dumps(config_to_dict(cfg), sort_keys=True)
+    b = json.dumps(config_to_dict(cfg2), sort_keys=True)
+    assert a == b

@@ -1,0 +1,108 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode executes the Pallas kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_reference, flash_attention
+from repro.kernels.flash_decode import decode_reference, flash_decode
+from repro.kernels.multi_lora import multi_lora, multi_lora_reference
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+FLASH_CASES = [
+    # B, Sq, Skv, Hq, Hkv, hd, causal, window, lens, dtype, bq, bk
+    (2, 256, 256, 4, 2, 64, True, 0, None, jnp.float32, 128, 128),
+    (2, 256, 256, 4, 4, 64, False, 0, None, jnp.float32, 128, 128),
+    (1, 512, 512, 2, 1, 64, True, 128, None, jnp.float32, 128, 128),
+    (2, 128, 384, 6, 3, 32, False, 0, (300, 128), jnp.float32, 128, 128),
+    (2, 256, 256, 4, 2, 64, True, 0, None, jnp.bfloat16, 128, 128),
+    (1, 128, 256, 3, 3, 48, True, 0, None, jnp.float32, 64, 64),
+    (2, 256, 512, 8, 2, 64, True, 64, (500, 256), jnp.float32, 64, 128),
+    (1, 64, 64, 2, 2, 128, False, 32, None, jnp.float32, 32, 32),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES,
+                         ids=[f"fa{i}" for i in range(len(FLASH_CASES))])
+def test_flash_attention_vs_ref(case):
+    B, Sq, Skv, Hq, Hkv, hd, causal, window, lens, dtype, bq, bk = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, hd), dtype)
+    l = None if lens is None else jnp.asarray(lens, jnp.int32)
+    out = flash_attention(q, k, v, l, causal=causal, sliding_window=window,
+                          block_q=bq, block_k=bk)
+    ref = attention_reference(q, k, v, causal=causal, sliding_window=window,
+                              kv_len=l)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+DECODE_CASES = [
+    (4, 512, 8, 2, 64, jnp.float32),
+    (2, 384, 6, 6, 128, jnp.float32),
+    (3, 1024, 16, 4, 64, jnp.float32),
+    (2, 256, 4, 1, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES,
+                         ids=[f"fd{i}" for i in range(len(DECODE_CASES))])
+def test_flash_decode_vs_ref(case):
+    B, Skv, Hq, Hkv, hd, dtype = case
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, hd), dtype)
+    kl = jax.random.randint(ks[3], (B,), 1, Skv + 1)
+    out = flash_decode(q, k, v, kl)
+    ref = decode_reference(q, k, v, kl)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+LORA_CASES = [
+    (256, 768, 768, 6, 32, jnp.float32),
+    (130, 512, 256, 3, 16, jnp.float32),
+    (256, 384, 384, 10, 64, jnp.bfloat16),
+    (64, 128, 128, 1, 8, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", LORA_CASES,
+                         ids=[f"ml{i}" for i in range(len(LORA_CASES))])
+def test_multi_lora_vs_ref(case):
+    N, din, dout, T, r, dtype = case
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (N, din), dtype)
+    a = jax.random.normal(ks[1], (T, din, r), dtype) * 0.05
+    b = jax.random.normal(ks[2], (T, r, dout), dtype) * 0.05
+    t = jax.random.randint(ks[3], (N,), 0, T)
+    out = multi_lora(x, a, b, t, scale=2.0)
+    ref = multi_lora_reference(x, a, b, t, scale=2.0)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32),
+                               atol=_tol(dtype), rtol=2e-2)
+
+
+def test_multi_lora_fused_base():
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (32, 64), jnp.float32)
+    a = jax.random.normal(ks[1], (2, 64, 8), jnp.float32) * 0.1
+    b = jax.random.normal(ks[2], (2, 8, 64), jnp.float32) * 0.1
+    w = jax.random.normal(ks[3], (64, 64), jnp.float32) * 0.1
+    t = jax.random.randint(ks[4], (32,), 0, 2)
+    out = multi_lora(x, a, b, t, w=w)
+    ref = x @ w + multi_lora_reference(x, a, b, t)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)

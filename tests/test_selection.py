@@ -1,0 +1,190 @@
+"""All thirteen selection algorithms: unified interface + behavioral
+properties (escalation, exploration, latency sensitivity, learning)."""
+
+import numpy as np
+import pytest
+
+from repro.classifiers.backend import HashBackend
+from repro.core.selection import ALGORITHMS, ReMoM, SelectionContext, \
+    get_algorithm
+from repro.core.selection.algorithms import RoutingRecord
+from repro.core.types import ModelProfile
+
+BE = HashBackend()
+CANDS = ["cheap", "mid", "big"]
+
+
+def ctx():
+    return SelectionContext(profiles={
+        "cheap": ModelProfile("cheap", cost_per_mtok=0.1, quality=0.4,
+                              latency_ms=50),
+        "mid": ModelProfile("mid", cost_per_mtok=0.5, quality=0.7,
+                            latency_ms=150),
+        "big": ModelProfile("big", cost_per_mtok=2.0, quality=0.95,
+                            latency_ms=600),
+    })
+
+
+def eq():
+    return BE.embed(["solve this equation"])[0]
+
+
+def test_all_thirteen_registered():
+    assert set(ALGORITHMS) == {"static", "elo", "routerdc", "hybrid",
+                               "automix", "knn", "kmeans", "svm", "mlp",
+                               "thompson", "gmt", "latency"}
+    # + remom as the thirteenth (multi-round orchestration class)
+    assert ReMoM is not None
+
+
+def test_unified_interface():
+    c = ctx()
+    for name, algo in ALGORITHMS.items():
+        m, conf = algo(eq(), 0, CANDS, c, {})
+        assert m in CANDS, name
+        assert isinstance(conf, float), name
+
+
+def test_static_picks_quality():
+    m, _ = ALGORITHMS["static"](eq(), 0, CANDS, ctx(), {})
+    assert m == "big"
+
+
+def test_elo_updates_shift_selection():
+    c = ctx()
+    for _ in range(30):
+        c.update_elo("cheap", "big")
+    m, _ = ALGORITHMS["elo"](eq(), 0, CANDS, c, {})
+    assert m == "cheap"
+
+
+def test_automix_cascade_escalates():
+    c = ctx()
+    # cheap verifies fine -> stays cheap
+    m, _ = ALGORITHMS["automix"](eq(), 0, CANDS, c,
+                                 {"threshold": 0.3})
+    assert m == "cheap"
+    # strict threshold -> escalate to the top
+    m, _ = ALGORITHMS["automix"](eq(), 0, CANDS, c, {"threshold": 0.99})
+    assert m == "big"
+    # injected self-verification: cheap fails, mid passes
+    verify = {"cheap": 0.2, "mid": 0.9, "big": 0.99}
+    m, _ = ALGORITHMS["automix"](eq(), 0, CANDS, c,
+                                 {"threshold": 0.6,
+                                  "verify_fn": lambda mm: verify[mm]})
+    assert m == "mid"
+
+
+def _seed_records(c, n=24):
+    rng = np.random.RandomState(0)
+    math_q = BE.embed([f"solve equation {i} algebra" for i in range(n // 2)])
+    code_q = BE.embed([f"debug python function {i}" for i in range(n // 2)])
+    for e in math_q:
+        c.add_record(RoutingRecord(e, 0, "big", 0.9))
+        c.add_record(RoutingRecord(e, 0, "cheap", 0.2))
+    for e in code_q:
+        c.add_record(RoutingRecord(e, 1, "cheap", 0.9, user="dev"))
+        c.add_record(RoutingRecord(e, 1, "big", 0.6, user="dev"))
+
+
+def test_knn_learns_domain_split():
+    c = ctx()
+    _seed_records(c)
+    q_math = BE.embed(["solve equation 99 algebra"])[0]
+    q_code = BE.embed(["debug python function 99"])[0]
+    assert ALGORITHMS["knn"](q_math, 0, CANDS, c, {})[0] == "big"
+    assert ALGORITHMS["knn"](q_code, 1, CANDS, c, {})[0] == "cheap"
+
+
+def test_svm_and_mlp_learn():
+    c = ctx()
+    _seed_records(c)
+    q_math = BE.embed(["solve equation 77 algebra"])[0]
+    m_svm, _ = ALGORITHMS["svm"](q_math, 0, CANDS, c, {"epochs": 10})
+    m_mlp, _ = ALGORITHMS["mlp"](q_math, 0, CANDS, c, {"steps": 40})
+    assert m_svm == "big"
+    assert m_mlp == "big"
+
+
+def test_kmeans_cluster_choice():
+    c = ctx()
+    _seed_records(c, n=32)
+    q = BE.embed(["solve equation 5 algebra"])[0]
+    m, _ = ALGORITHMS["kmeans"](q, 0, CANDS, c, {"clusters": 2})
+    assert m == "big"
+
+
+def test_thompson_converges_on_feedback():
+    c = ctx()
+    for _ in range(80):
+        c.update_feedback("mid", True)
+        c.update_feedback("big", False)
+        c.update_feedback("cheap", False)
+    wins = sum(ALGORITHMS["thompson"](eq(), 0, CANDS, c, {})[0] == "mid"
+               for _ in range(20))
+    assert wins >= 15
+
+
+def test_gmt_personalizes():
+    c = ctx()
+    _seed_records(c)
+    q_code = BE.embed(["debug python function 123"])[0]
+    m, _ = ALGORITHMS["gmt"](q_code, 1, CANDS, c, {"user": "dev"})
+    assert m == "cheap"
+
+
+def test_latency_aware_tracks_observations():
+    c = ctx()
+    for _ in range(10):
+        c.observe_latency("big", 20.0)     # big got fast
+        c.observe_latency("cheap", 500.0)
+        c.observe_latency("mid", 300.0)
+    m, _ = ALGORITHMS["latency"](eq(), 0, CANDS, c, {})
+    assert m == "big"
+
+
+def test_routerdc_follows_contrastive_embeddings():
+    c = ctx()
+    _seed_records(c)
+    q = BE.embed(["solve equation 42 algebra"])[0]
+    m, _ = ALGORITHMS["routerdc"](q, 0, CANDS, c, {})
+    assert m == "big"
+
+
+def test_hybrid_cost_weighting():
+    c = ctx()
+    m_cost, _ = ALGORITHMS["hybrid"](eq(), 0, CANDS, c,
+                                     {"alpha": 0.0, "beta": 0.0,
+                                      "gamma": 1.0})
+    assert m_cost == "cheap"
+
+
+def test_remom_breadth_schedule_and_synthesis():
+    calls = []
+
+    def call_fn(model, prompt, seed):
+        calls.append((model, "Reference solutions" in prompt))
+        return f"answer-from-{model}-{seed}"
+
+    r = ReMoM(call_fn=call_fn, breadth=[4, 2], distribution="equal")
+    out = r.run("hard question", ["a", "b"])
+    # rounds: 4 + 2 + 1 = 7 calls; rounds 2+ carry references
+    assert len(calls) == 7
+    assert [c[1] for c in calls] == [False] * 4 + [True] * 3
+    assert out.startswith("answer-from-")
+    # first_only distribution
+    calls.clear()
+    r2 = ReMoM(call_fn=call_fn, breadth=[3], distribution="first_only")
+    r2.run("q", ["a", "b"])
+    assert all(m == "a" for m, _ in calls)
+
+
+def test_remom_compaction():
+    def call_fn(model, prompt, seed):
+        return "x" * 5000
+    r = ReMoM(call_fn=call_fn, breadth=[2], compaction="last_n_tokens",
+              compact_tokens=10)
+    r.run("q", ["a"])
+    # second round prompt must have been compacted: verify via template use
+    refs = r._compact("y" * 5000)
+    assert len(refs) == 40

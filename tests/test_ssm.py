@@ -1,0 +1,98 @@
+"""Chunked recurrent mixers vs step-by-step sequential oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import ssm as S
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _cfg(arch):
+    return get_reduced(arch).replace(dtype="float32")
+
+
+def test_mamba_chunked_equals_stepwise():
+    cfg = _cfg("jamba-v0.1-52b")
+    p = S.mamba_init(KEY, cfg, jnp.float32)
+    B, Sq = 2, 16
+    x = jax.random.normal(KEY, (B, Sq, cfg.d_model)) * 0.5
+
+    y_full, st_full = S.mamba_forward(p, cfg, x, return_state=True)
+    # stepwise oracle
+    st = S.mamba_zero_state(cfg, B, jnp.float32)
+    ys = []
+    for t in range(Sq):
+        y1, st = S.mamba_step(p, cfg, x[:, t:t + 1], st)
+        ys.append(y1)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_full, y_seq, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(st_full["h"], st["h"], atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_state_carry_across_segments():
+    cfg = _cfg("jamba-v0.1-52b")
+    p = S.mamba_init(KEY, cfg, jnp.float32)
+    B, Sq = 1, 12
+    x = jax.random.normal(KEY, (B, Sq, cfg.d_model)) * 0.5
+    y_full, _ = S.mamba_forward(p, cfg, x)
+    y1, st = S.mamba_forward(p, cfg, x[:, :7], return_state=True)
+    y2, _ = S.mamba_forward(p, cfg, x[:, 7:], state=st)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_mlstm_chunked_equals_stepwise():
+    cfg = _cfg("xlstm-350m")
+    p = S.mlstm_init(KEY, cfg, jnp.float32)
+    B, Sq = 2, 16
+    x = jax.random.normal(KEY, (B, Sq, cfg.d_model)) * 0.5
+    y_full, st_full = S.mlstm_forward(p, cfg, x, return_state=True)
+    st = S.mlstm_zero_state(cfg, B, jnp.float32)
+    ys = []
+    for t in range(Sq):
+        y1, st = S.mlstm_step(p, cfg, x[:, t:t + 1], st)
+        ys.append(y1)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_full, y_seq, atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(st_full["C"], st["C"], atol=2e-4, rtol=2e-3)
+
+
+def test_slstm_forward_equals_stepwise():
+    cfg = _cfg("xlstm-350m")
+    p = S.slstm_init(KEY, cfg, jnp.float32)
+    B, Sq = 2, 10
+    x = jax.random.normal(KEY, (B, Sq, cfg.d_model)) * 0.5
+    y_full, st_full = S.slstm_forward(p, cfg, x, return_state=True)
+    st = S.slstm_zero_state(cfg, B, jnp.float32)
+    ys = []
+    for t in range(Sq):
+        y1, st = S.slstm_step(p, cfg, x[:, t:t + 1], st)
+        ys.append(y1)
+    np.testing.assert_allclose(y_full, jnp.concatenate(ys, 1), atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(st_full["c"], st["c"], atol=1e-5, rtol=1e-5)
+
+
+def test_mlstm_stability_long_context():
+    """Exponential gating must not overflow across 512 tokens."""
+    cfg = _cfg("xlstm-350m")
+    p = S.mlstm_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (1, 512, cfg.d_model)) * 2.0
+    y, st = S.mlstm_forward(p, cfg, x, return_state=True)
+    assert bool(jnp.isfinite(y).all())
+    assert bool(jnp.isfinite(st["C"]).all())
+
+
+def test_causal_conv_state_equivalence():
+    w = jax.random.normal(KEY, (4, 8)) * 0.3
+    b = jnp.zeros((8,))
+    x = jax.random.normal(KEY, (2, 20, 8))
+    y_full, _ = S._causal_conv(x, w, b, None)
+    y1, st = S._causal_conv(x[:, :11], w, b, None)
+    y2, _ = S._causal_conv(x[:, 11:], w, b, st)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=1e-5, rtol=1e-5)
