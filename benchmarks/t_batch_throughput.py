@@ -1,0 +1,125 @@
+"""Batch-first pipeline throughput: sequential ``route()`` vs
+``route_batch()`` over a mixed scenario workload on the local fleet.
+
+Measures QPS for both paths plus the two batch-level effects the staged
+pipeline exists for: embed-calls-per-request (shared embedding plan:
+one ``backend.embed()`` per batch instead of one-or-more per request)
+and fleet batch-slot utilisation (micro-batched dispatch fills the
+jitted prefill/decode batch slots with real prompts instead of padding).
+
+  PYTHONPATH=src python -m benchmarks.run --only batch
+"""
+
+import time
+
+from repro.core.decision import leaf
+from repro.core.router import SemanticRouter
+from repro.core.types import (Decision, Endpoint, Message, ModelProfile,
+                              ModelRef, Request, RouterConfig)
+
+N_REQUESTS = 16
+
+WORKLOAD_TEMPLATES = [
+    "debug this python function it raises an error ({i})",
+    "solve the integral of x^2 dx with calculus ({i})",
+    "summarize this incident report for the team ({i})",
+    "what is the capital of france ({i})",
+]
+
+
+class _CountingBackend:
+    """Counts embed() calls; everything else passes through."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.embed_calls = 0
+
+    def embed(self, texts):
+        self.embed_calls += 1
+        return self.inner.embed(texts)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def _config():
+    return RouterConfig(
+        signals={
+            "domain": {"code": {"mmlu_categories": ["computer science"]},
+                       "math": {"mmlu_categories": ["math"]}},
+            "complexity": {"hard": {
+                "hard_examples": ["prove the convergence of the series"],
+                "easy_examples": ["what is 2 plus 2"],
+                "threshold": 0.05, "level": "hard"}},
+        },
+        decisions=[
+            # two candidates + knn => the selection stage embeds the query;
+            # complexity("hard") => an embedding-based signal runs too, so
+            # the embed-plan effect (k consumers -> 1 call/batch) is visible
+            Decision("code", leaf("domain", "code"),
+                     [ModelRef("smollm"), ModelRef("smollm-b")],
+                     priority=10, algorithm="knn"),
+            Decision("math", leaf("domain", "math"),
+                     [ModelRef("smollm"), ModelRef("smollm-b")],
+                     priority=10, algorithm="knn"),
+            Decision("hard", leaf("complexity", "hard"),
+                     [ModelRef("smollm")], priority=5),
+        ],
+        endpoints=[Endpoint("local", "vllm")],
+        model_profiles={
+            "smollm": ModelProfile("smollm", cost_per_mtok=0.05,
+                                   quality=0.4, arch="smollm-360m"),
+            "smollm-b": ModelProfile("smollm-b", cost_per_mtok=0.05,
+                                     quality=0.4, arch="smollm-360m"),
+        },
+        default_model="smollm")
+
+
+def _reqs(n):
+    return [Request(messages=[Message(
+        "user", WORKLOAD_TEMPLATES[i % len(WORKLOAD_TEMPLATES)].format(i=i))],
+        user=f"u{i % 3}") for i in range(n)]
+
+
+def run():
+    from repro.serving.fleet import LocalFleet
+    cfg = _config()
+    fleet = LocalFleet(["smollm-360m"], reduced=True, gen_tokens=4)
+    router = SemanticRouter(cfg, call_fn=fleet.call_fn(
+        {"smollm": "smollm-360m", "smollm-b": "smollm-360m"}))
+    router.backend = _CountingBackend(router.backend)
+
+    router.route(_reqs(1)[0])          # warm up (jit compile prefill/decode)
+    member = fleet.members["smollm-360m"]
+
+    # sequential path
+    member.calls = member.prompts_in = 0
+    router.backend.embed_calls = 0
+    t0 = time.perf_counter()
+    for r in _reqs(N_REQUESTS):
+        router.route(r)
+    dt_seq = time.perf_counter() - t0
+    seq_embeds = router.backend.embed_calls
+    seq_slots = member.slots_per_call
+
+    # batched path (distinct texts; no cache plugin, so state is comparable)
+    member.calls = member.prompts_in = 0
+    router.backend.embed_calls = 0
+    t0 = time.perf_counter()
+    router.route_batch(_reqs(N_REQUESTS))
+    dt_bat = time.perf_counter() - t0
+    bat_embeds = router.backend.embed_calls
+    bat_slots = member.slots_per_call
+    router.close()
+
+    return [
+        ("batch_sequential_route", dt_seq / N_REQUESTS * 1e6,
+         f"qps={N_REQUESTS / dt_seq:.1f} "
+         f"embed_calls_per_req={seq_embeds / N_REQUESTS:.2f} "
+         f"slots_per_generate={seq_slots:.2f}"),
+        ("batch_route_batch", dt_bat / N_REQUESTS * 1e6,
+         f"qps={N_REQUESTS / dt_bat:.1f} "
+         f"embed_calls_per_req={bat_embeds / N_REQUESTS:.2f} "
+         f"slots_per_generate={bat_slots:.2f} "
+         f"speedup={dt_seq / dt_bat:.2f}x"),
+    ]

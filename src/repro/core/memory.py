@@ -96,11 +96,11 @@ class MemoryStore:
     # -- read path -------------------------------------------------------------
     def retrieve(self, user: str, query: str, *, top_k: int = 8,
                  mode: str = "weighted", weights=(0.7, 0.2, 0.1),
-                 rrf_k: int = 60) -> List[MemoryChunk]:
+                 rrf_k: int = 60, embed_fn=None) -> List[MemoryChunk]:
         chunks = self.chunks.get(user, [])
         if not chunks or not retrieval_gate(query):
             return []
-        q_emb = self.embed_fn([query])[0]
+        q_emb = (embed_fn or self.embed_fn)([query])[0]
         vec = np.stack([c.embedding for c in chunks]) @ q_emb
         bm = np.asarray(TS.BM25([c.text for c in chunks]).scores(query))
         ng = np.asarray([TS.ngram_similarity(query, c.text)
@@ -186,7 +186,8 @@ def memory_plugin(req: Request, ctx: Dict[str, Any], cfg: Dict[str, Any]):
     user = req.user or "anonymous"
     hits = store.retrieve(user, req.latest_user_text,
                           top_k=cfg.get("top_k", 8),
-                          mode=cfg.get("mode", "weighted"))
+                          mode=cfg.get("mode", "weighted"),
+                          embed_fn=ctx.get("embed"))
     hits = reflection_gate(hits, budget=cfg.get("budget", 4),
                            half_life_s=cfg.get("half_life_s", 3600.0))
     if hits:

@@ -11,6 +11,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import defaultdict
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -89,3 +90,21 @@ class Span:
 
 
 METRICS = Metrics()
+
+
+@contextmanager
+def stage_scope(parent: Optional[Span], name: str, *,
+                metric: str = "stage_latency_ms", **attrs):
+    """Span + latency-histogram scope for one pipeline stage.
+
+    Creates ``name`` as a child of ``parent`` (or a standalone root span
+    when ``parent`` is None), finishes it on exit, and records the stage
+    duration into ``metric`` labelled by the stage name."""
+    span = parent.child(name, **attrs) if parent is not None \
+        else Span(name, attributes=dict(attrs))
+    try:
+        yield span
+    finally:
+        span.finish()
+        METRICS.observe(metric, span.duration_ms,
+                        stage=name.removeprefix("stage:"))

@@ -1,0 +1,362 @@
+"""Batch-first staged routing pipeline (§12.2, batched execution).
+
+The request path is an explicit sequence of named stages:
+
+    translate -> signals -> decide -> request-plugins -> select ->
+    dispatch -> response-plugins -> wrap
+
+Each stage operates on a *batch* of ``RequestContext`` objects, so N
+requests move through the pipeline stage-by-stage instead of one request
+running the whole monolith at a time.  Two batch-level optimisations fall
+out of this shape:
+
+* **Shared embedding plan** — at most one ``backend.embed()`` call
+  covers every query text in the batch, issued lazily by the first
+  consumer; the vectors are memoized on the contexts' shared
+  :class:`EmbeddingPlan` and reused by signal extraction, the semantic
+  cache, selection algorithms, and the memory store instead of each
+  issuing its own embed call (the monolith re-embedded the same text up
+  to four times per request; batches with no embedding consumers stay
+  embed-free).
+* **Micro-batched dispatch** — the dispatch stage groups same-model
+  requests and hands them to the endpoint router as one batched upstream
+  call, filling the fleet's fixed batch slots instead of padding them.
+
+``SemanticRouter.route()`` is a batch of one; ``route_batch()`` is the
+same code path with N contexts.  Per-stage spans and
+``stage_latency_ms`` metrics make the batched path traceable.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.observability import METRICS, Span, stage_scope
+from repro.core.plugins.base import PluginChain
+from repro.core.types import (Request, Response, RoutingOutcome,
+                              SignalResult)
+
+
+# ---------------------------------------------------------------------------
+# shared embedding plan
+# ---------------------------------------------------------------------------
+
+class EmbeddingPlan:
+    """Per-batch memo of text embeddings over a base ``embed`` callable.
+
+    Demand-driven: ``register(texts)`` only records the batch's query
+    texts; no base call happens until some consumer actually embeds.
+    The first ``embed()`` miss then issues ONE base call covering the
+    registered texts plus the request — so a batch with no embedding
+    consumers costs zero embed calls, and a batch with k consumers
+    costs one.  ``prime(texts)`` is the eager variant.  Thread-safe:
+    learned-signal evaluators call ``embed`` from the signal thread pool.
+    """
+
+    def __init__(self, base_embed: Callable[[Sequence[str]], np.ndarray]):
+        self.base = base_embed
+        self.memo: Dict[str, np.ndarray] = {}
+        self.base_calls = 0
+        self._pending: List[str] = []
+        self._lock = threading.Lock()
+
+    def _fill(self, texts: Sequence[str]):
+        missing = [t for t in dict.fromkeys(texts) if t not in self.memo]
+        if not missing:
+            return
+        embs = self.base(missing)
+        self.base_calls += 1
+        for t, e in zip(missing, embs):
+            self.memo[t] = e
+
+    def register(self, texts: Sequence[str]):
+        """Record texts to piggyback on the first miss-triggered call."""
+        with self._lock:
+            self._pending.extend(t for t in texts if t not in self.memo)
+
+    def prime(self, texts: Sequence[str]):
+        """One batched base call for every not-yet-seen text."""
+        with self._lock:
+            self._fill(texts)
+
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        """Drop-in replacement for ``backend.embed`` backed by the memo."""
+        with self._lock:
+            if any(t not in self.memo for t in texts):
+                self._fill(self._pending + list(texts))
+                self._pending = []
+            return np.stack([self.memo[t] for t in texts])
+
+
+# ---------------------------------------------------------------------------
+# per-request state
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RequestContext:
+    """Everything one request carries through the staged pipeline."""
+    req: Request
+    plan: EmbeddingPlan
+    root: Span
+    t0: float
+    sig: Optional[SignalResult] = None
+    decision: Any = None                    # DecisionEngine EvalResult
+    outcome: Optional[RoutingOutcome] = None
+    chain: Optional[PluginChain] = None
+    plugin_ctx: Dict[str, Any] = field(default_factory=dict)
+    model: Optional[str] = None
+    response: Optional[Response] = None
+    upstream_ms: float = 0.0                # this request's dispatch time
+    short: bool = False                     # request plugin short-circuited
+    joined: bool = False                    # rides an in-flight duplicate
+    error: Optional[Exception] = None       # dispatch failed for THIS request
+    wrapped: Optional[Tuple[Response, RoutingOutcome]] = None
+
+
+# ---------------------------------------------------------------------------
+# stages — each takes (router, active_contexts) and mutates the contexts
+# ---------------------------------------------------------------------------
+
+def stage_translate(router, ctxs: List[RequestContext]):
+    for c in ctxs:
+        c.req = router._inbound_translate(c.req)
+
+
+def stage_signals(router, ctxs: List[RequestContext]):
+    # the embedding plan: at most ONE backend.embed() call for the whole
+    # batch's query texts, issued lazily when the first consumer (signals
+    # / cache / selection / memory) embeds — zero calls if none do.
+    plan = ctxs[0].plan
+    plan.register([c.req.latest_user_text for c in ctxs])
+    # open the per-request spans BEFORE extraction so their duration
+    # covers the batched signal wave (child spans carry each evaluator's
+    # own measured latency)
+    spans = [c.root.child("signals") for c in ctxs]
+    sigs = router.signals.extract_many([c.req for c in ctxs],
+                                       router.used_types or None,
+                                       embed_fn=plan.embed)
+    for c, sig_span, sig in zip(ctxs, spans, sigs):
+        c.sig = sig
+        for k, m in sig.matches.items():
+            sig_span.child(f"signal:{k}").finish(
+                matched=m.matched, conf=round(m.confidence, 3),
+                eval_ms=round(m.latency_ms, 3))
+            METRICS.inc("signal_evaluations_total", type=m.key.type)
+            if m.matched:
+                METRICS.inc("signal_matches_total", type=m.key.type)
+        sig_span.finish()
+
+
+def stage_decide(router, ctxs: List[RequestContext]):
+    # shared across the batch: cache entries begun within it, so the
+    # cache plugin only joins in-flight duplicates it can trust to
+    # complete (a stale pending entry from a dead request is replaced)
+    pending_begun: set = set()
+    for c in ctxs:
+        dec_span = c.root.child("decision")
+        res = router.engine.evaluate(c.sig)
+        dec_span.finish(
+            decision=res.decision.name if res.decision else None,
+            confidence=round(res.confidence, 3))
+        c.decision = res
+        c.outcome = RoutingOutcome(
+            decision=res.decision.name if res.decision else None,
+            model=router.config.default_model, endpoint=None,
+            confidence=res.confidence, signals=c.sig)
+
+        plugins = dict(router.config.plugin_templates)
+        if res.decision:
+            METRICS.inc("decision_matches_total", decision=res.decision.name)
+            plugins = dict(res.decision.plugins)
+        # request-side plugins imply their response-side halves
+        if "cache" in plugins:
+            plugins.setdefault("cache_write", {"enabled": True})
+        if "memory" in plugins:
+            plugins.setdefault("memory_write", {"enabled": True})
+
+        c.plugin_ctx = {"cache": router.cache, "memory": router.memory,
+                        "rag": router.rag, "halugate": router.halugate,
+                        "signals": c.sig, "embed": c.plan.embed,
+                        "pending_begun": pending_begun, "outcome": {}}
+        c.chain = PluginChain(plugins, c.plugin_ctx)
+
+
+def stage_request_plugins(router, ctxs: List[RequestContext]):
+    for c in ctxs:
+        c.req, short, ptrace = c.chain.run_request(c.req)
+        for t in ptrace:
+            c.root.child(f"plugin:{t['plugin']}").finish(**t)
+        if short is not None:
+            c.short = True
+            c.response = short
+            c.outcome.fast_response = short
+            c.outcome.cache_hit = c.plugin_ctx.get("outcome", {}).get(
+                "cache_hit", False)
+        elif c.plugin_ctx.get("cache_join_entry") is not None:
+            # an identical query in this batch is already in flight:
+            # defer — stage_wrap back-fills from its completed cache entry
+            c.joined = True
+
+
+def stage_select(router, ctxs: List[RequestContext]):
+    for c in ctxs:
+        model, _conf = router._select(c.req, c.decision, c.sig, plan=c.plan)
+        if c.req.metadata.get("pinned_model"):
+            model = c.req.metadata["pinned_model"]   # conversation pinning
+        c.model = model
+        c.outcome.model = model
+
+
+def stage_dispatch(router, ctxs: List[RequestContext]):
+    # micro-batching: same-model requests become ONE upstream call when
+    # the transport supports it (LocalFleet fills its batch slots).
+    groups: Dict[str, List[RequestContext]] = {}
+    for c in ctxs:
+        groups.setdefault(c.model, []).append(c)
+    for model, group in groups.items():
+        spans = [c.root.child("upstream", model=model,
+                              batched=len(group) > 1) for c in group]
+        t0 = time.perf_counter()
+        # return_errors isolates failures to the requests they belong to:
+        # a poisoned request comes back as an Exception entry instead of
+        # aborting the batch or re-dispatching already-answered requests.
+        pairs = router.endpoint_router.dispatch_many(
+            [c.req for c in group], model, router.call_fn,
+            sessions=[c.req.user for c in group], return_errors=True)
+        group_ms = (time.perf_counter() - t0) * 1e3
+        for c, span, out in zip(group, spans, pairs):
+            if isinstance(out, Exception):
+                c.error = out
+                c.response = Response(
+                    f"upstream dispatch failed: {out}", model=model,
+                    finish_reason="error",
+                    headers={"x-vsr-error": "dispatch"})
+                span.finish(error=str(out))
+                METRICS.inc("dispatch_errors_total", model=model)
+                continue
+            resp, ep = out
+            span.finish(endpoint=ep.name, provider=ep.provider)
+            c.response = resp
+            # the group's dispatch wall clock: excludes other models'
+            # groups, but is an UPPER bound on this request's own service
+            # time when the group spans several transport chunks
+            c.upstream_ms = group_ms
+            c.outcome.endpoint = ep.name
+            METRICS.inc("model_requests_total", model=model)
+            METRICS.inc("tokens_total",
+                        resp.usage.get("completion_tokens", 0), model=model)
+
+
+def stage_response_plugins(router, ctxs: List[RequestContext]):
+    for c in ctxs:
+        if c.error is not None:      # never cache/memorize error responses
+            entry = c.plugin_ctx.pop("cache_entry", None)
+            if entry is not None:    # don't leave a forever-pending entry
+                router.cache.abandon(entry)
+            continue
+        c.response, rtrace = c.chain.run_response(c.req, c.response)
+        for t in rtrace:
+            c.root.child(f"plugin:{t['plugin']}").finish(**t)
+
+
+def _resolve_join(router, c: RequestContext):
+    """Back-fill a deferred duplicate from its owner's completed cache
+    entry — the batched equivalent of the sequential cache hit the
+    second identical route() call would have gotten."""
+    entry = c.plugin_ctx.get("cache_join_entry")
+    if entry is not None and not entry.pending and entry.response is not None:
+        r = entry.response
+        c.response = Response(r.content, r.model, usage=dict(r.usage),
+                              headers={"x-vsr-cache-hit": "true"})
+        c.outcome.fast_response = c.response
+        c.outcome.cache_hit = True
+        entry.hits += 1                 # stat parity with a sequential hit
+        router.cache.hits += 1
+    else:
+        # the owner's upstream call failed; an identical call would have
+        # failed identically — surface the same error outcome
+        c.error = RuntimeError("in-flight identical query failed upstream")
+        c.response = Response(
+            "upstream dispatch failed for joined duplicate query",
+            model=c.outcome.model, finish_reason="error",
+            headers={"x-vsr-error": "dispatch"})
+
+
+def stage_wrap(router, ctxs: List[RequestContext]):
+    for c in ctxs:
+        if c.joined:
+            _resolve_join(router, c)
+        c.response.headers.update(router._signal_headers(c.sig, c.decision))
+        latency = (time.perf_counter() - c.t0) * 1e3
+        METRICS.observe("routing_latency_ms", latency)
+        if not c.short and not c.joined and c.error is None:
+            # per-model latency is the request's model-group dispatch time
+            # (not the whole batch's wall clock) — a slow model in the
+            # batch must not poison latency-aware selection for fast ones.
+            METRICS.observe("model_latency_ms", c.upstream_ms, model=c.model)
+            router.selection_ctx.observe_latency(c.model, c.upstream_ms)
+        c.root.finish()
+        c.outcome.trace = [dict(span=s.name, ms=round(s.duration_ms, 3))
+                           for _, s in c.root.flatten()]
+        # error responses are never persisted as Responses-API history:
+        # storing them would pin follow-ups to the model that just failed
+        final = c.response if c.error is not None else \
+            router._outbound_translate(c.req, c.response)
+        c.wrapped = (final, c.outcome)
+
+
+# (name, fn, runs_on_short): stages with runs_on_short=False skip contexts
+# already answered by a request-plugin short-circuit (Equation 13's bottom)
+# or deferred onto an in-flight duplicate's cache entry.
+STAGES: List[Tuple[str, Callable, bool]] = [
+    ("translate", stage_translate, True),
+    ("signals", stage_signals, True),
+    ("decide", stage_decide, True),
+    ("request_plugins", stage_request_plugins, True),
+    ("select", stage_select, False),
+    ("dispatch", stage_dispatch, False),
+    ("response_plugins", stage_response_plugins, False),
+    ("wrap", stage_wrap, True),
+]
+
+
+def run_pipeline(router, reqs: Sequence[Request], *,
+                 raise_dispatch_errors: bool = False
+                 ) -> List[Tuple[Response, RoutingOutcome]]:
+    """Run N requests through the staged pipeline as one batch.
+
+    ``raise_dispatch_errors`` is set by ``route()`` to keep its raising
+    contract; ``route_batch()`` instead returns a per-request error
+    Response for failed dispatches, regardless of batch size."""
+    if not reqs:
+        return []
+    plan = EmbeddingPlan(router.backend.embed)
+    ctxs = [RequestContext(req=r, plan=plan, root=Span("request"),
+                           t0=time.perf_counter()) for r in reqs]
+    METRICS.inc("pipeline_batches_total")
+    METRICS.observe("pipeline_batch_size", len(ctxs))
+    batch_root = Span("pipeline", attributes={"batch": len(ctxs)})
+    for name, fn, on_short in STAGES:
+        active = ctxs if on_short else \
+            [c for c in ctxs if not (c.short or c.joined)]
+        if not active:
+            continue
+        with stage_scope(batch_root, f"stage:{name}", batch=len(active)):
+            fn(router, active)
+    batch_root.finish()
+    if raise_dispatch_errors:
+        for c in ctxs:
+            if c.error is not None:
+                raise c.error
+    # batch-level stage timings appended to every request's trace so the
+    # batched path stays observable per-request.
+    stage_trace = [dict(span=s.name, ms=round(s.duration_ms, 3))
+                   for _, s in batch_root.flatten() if s is not batch_root]
+    for c in ctxs:
+        c.outcome.trace.extend(stage_trace)
+    return [c.wrapped for c in ctxs]

@@ -53,6 +53,12 @@ class PluginChain:
                           "short_circuit": resp is not None})
             if resp is not None:
                 return req, resp, trace
+            if self.ctx.get("cache_join_entry") is not None:
+                # deferred cache join: this request rides an in-flight
+                # identical query — stop the chain exactly where a cache
+                # hit would have short-circuited (no rag/memory/prompt
+                # work whose results would be discarded)
+                return req, None, trace
         return req, None, trace
 
     def run_response(self, req: Request, resp: Response):

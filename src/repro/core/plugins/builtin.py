@@ -42,11 +42,11 @@ class SemanticCache:
         self.lookups = 0
         self.hits = 0
 
-    def lookup(self, text: str, threshold: float):
+    def lookup(self, text: str, threshold: float, embed_fn=None):
         self.lookups += 1
         if not self.entries:
             return None, None
-        q = self.embed_fn([text])[0]
+        q = (embed_fn or self.embed_fn)([text])[0]
         mats = np.stack([e.embedding for e in self.entries])
         sims = mats @ q
         i = int(np.argmax(sims))
@@ -59,9 +59,10 @@ class SemanticCache:
             return e.response, e
         return None, None
 
-    def begin(self, text: str) -> CacheEntry:
+    def begin(self, text: str, embed_fn=None) -> CacheEntry:
         """Write-through protocol: register pending before model call."""
-        e = CacheEntry(text, self.embed_fn([text])[0], None, pending=True)
+        e = CacheEntry(text, (embed_fn or self.embed_fn)([text])[0], None,
+                       pending=True)
         self.entries.append(e)
         if len(self.entries) > self.max_entries:
             self.entries.pop(0)
@@ -70,6 +71,13 @@ class SemanticCache:
     def complete(self, entry: CacheEntry, resp: Response):
         entry.response = resp
         entry.pending = False
+
+    def abandon(self, entry: CacheEntry):
+        """Drop a pending write-through entry whose model call failed —
+        otherwise it forces cache misses for its text forever.  (Identity
+        comparison: dataclass == on the ndarray field is ambiguous.)"""
+        if entry.pending:
+            self.entries = [e for e in self.entries if e is not entry]
 
     @property
     def hit_rate(self):
@@ -80,13 +88,31 @@ def cache_plugin(req: Request, ctx: Dict[str, Any], cfg: Dict[str, Any]
                  ) -> Tuple[Request, Optional[Response]]:
     cache: SemanticCache = ctx["cache"]
     thr = cfg.get("threshold", 0.92)
-    resp, entry = cache.lookup(req.latest_user_text, thr)
+    embed = ctx.get("embed")      # batch's shared EmbeddingPlan, when routed
+    resp, entry = cache.lookup(req.latest_user_text, thr, embed_fn=embed)
     if resp is not None:
         out = Response(resp.content, resp.model, usage=dict(resp.usage),
                        headers={"x-vsr-cache-hit": "true"})
         ctx.setdefault("outcome", {})["cache_hit"] = True
         return req, out
-    ctx["cache_entry"] = cache.begin(req.latest_user_text)
+    begun = ctx.get("pending_begun")    # entries begun in THIS batch
+    identical_pending = entry is not None and entry.pending and \
+        entry.key_text == req.latest_user_text
+    if identical_pending and begun is not None and id(entry) in begun:
+        # IDENTICAL query in flight in the same batch: join its
+        # write-through entry — the pipeline defers this request and
+        # back-fills it from the owner's completed entry, exactly one
+        # upstream call per text.  Merely similar queries must NOT join.
+        ctx["cache_join_entry"] = entry
+        return req, None
+    if identical_pending:
+        # stale pending entry from a dead/failed earlier request: joining
+        # would error forever — drop it and write through afresh
+        cache.abandon(entry)
+    e = cache.begin(req.latest_user_text, embed_fn=embed)
+    if begun is not None:
+        begun.add(id(e))
+    ctx["cache_entry"] = e
     return req, None
 
 

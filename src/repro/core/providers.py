@@ -157,6 +157,7 @@ class EndpointRouter:
         self.auth = auth or AuthFactory()
         self.health: Dict[str, bool] = {e.name: True for e in endpoints}
         self.failures: Dict[str, int] = {}
+        self._draws = itertools.count()
 
     def serving(self, model: str) -> List[Endpoint]:
         eps = [e for e in self.endpoints
@@ -175,7 +176,10 @@ class EndpointRouter:
             h = int(hashlib.sha256(session.encode()).hexdigest(), 16)
             x = (h % 10_000) / 10_000 * total
         else:
-            x = (time.time_ns() % 10_000) / 10_000 * total
+            # golden-ratio low-discrepancy sequence: equidistributed, so
+            # endpoint weights are actually respected (a time_ns modulo
+            # draw aliases with caller timing and skews the distribution)
+            x = (next(self._draws) * 0.6180339887498949) % 1.0 * total
         acc = 0.0
         for e, w in zip(eps, weights):
             acc += w
@@ -193,10 +197,15 @@ class EndpointRouter:
         self.failures[ep.name] = 0
         self.health[ep.name] = True
 
-    def dispatch(self, req: Request, model: str, call_fn,
-                 session: Optional[str] = None) -> Tuple[Response, Endpoint]:
-        """call_fn(endpoint, payload, headers) -> provider payload.
-        Weighted selection with failover cascade to next endpoints."""
+    def _with_failover(self, model: str, session: Optional[str], attempt,
+                       mark_failures: bool = True):
+        """Weighted selection + failover cascade shared by single and
+        batched dispatch.  ``attempt(ep)`` performs the upstream call;
+        any exception cascades to the next endpoint.  ``mark_failures``
+        is disabled for the batched group attempt, where one poisoned
+        request fails the whole group: blame is attributed by the
+        per-request retry instead, so request-level errors cannot charge
+        endpoint health once per batch on top of once per request."""
         tried = set()
         last_err = None
         for _ in range(len(self.endpoints)):
@@ -208,13 +217,91 @@ class EndpointRouter:
                     break
                 ep = max(remaining, key=lambda e: e.weight)
             tried.add(ep.name)
-            payload = to_provider_payload(req, ep, model)
-            headers = self.auth.outbound_headers(req, ep)
             try:
-                out = call_fn(ep, payload, headers)
+                out = attempt(ep)
                 self.mark_success(ep)
-                return from_provider_payload(out, ep), ep
+                return out
             except Exception as e:  # failover
                 last_err = e
-                self.mark_failure(ep)
+                if mark_failures:
+                    self.mark_failure(ep)
         raise RuntimeError(f"no healthy endpoint for {model}: {last_err}")
+
+    def dispatch(self, req: Request, model: str, call_fn,
+                 session: Optional[str] = None) -> Tuple[Response, Endpoint]:
+        """call_fn(endpoint, payload, headers) -> provider payload.
+        Weighted selection with failover cascade to next endpoints."""
+        def attempt(ep):
+            payload = to_provider_payload(req, ep, model)
+            headers = self.auth.outbound_headers(req, ep)
+            return from_provider_payload(call_fn(ep, payload, headers), ep), \
+                ep
+        return self._with_failover(model, session, attempt)
+
+    def dispatch_many(self, reqs: List[Request], model: str, call_fn,
+                      sessions: Optional[List[Optional[str]]] = None,
+                      return_errors: bool = False):
+        """Micro-batched dispatch: when the transport exposes a
+        ``batch_call(ep, payloads, headers_list) -> payloads`` attribute,
+        same-model requests sharing a sticky endpoint become ONE batched
+        upstream call (the local fleet fills its fixed batch slots instead
+        of padding them).  Requests whose sessions resolve to different
+        endpoints keep their affinity — they form separate sub-batches.
+        Transports without batch support fall back to per-request
+        ``dispatch`` with identical semantics.
+
+        With ``return_errors`` a failure is isolated to the requests it
+        belongs to: the failing sub-batch is retried one-by-one and the
+        still-failing entries come back as Exception objects, so results
+        from sub-batches that already succeeded upstream are never
+        discarded or re-dispatched.  Without it, failures raise.
+
+        Failover retries a whole sub-batch on the next endpoint: a
+        transport whose ``batch_call`` is not atomic (partial chunks may
+        have executed before raising) can see those requests re-sent —
+        same caveat as any at-least-once retry."""
+        sessions = sessions or [None] * len(reqs)
+        batch_call = getattr(call_fn, "batch_call", None)
+
+        def one(r, s):
+            try:
+                return self.dispatch(r, model, call_fn, session=s)
+            except Exception as e:
+                if not return_errors:
+                    raise
+                return e
+
+        if batch_call is None or len(reqs) <= 1:
+            return [one(r, s) for r, s in zip(reqs, sessions)]
+        # sticky sessions pin their endpoint; sessionless requests share
+        # ONE group (a per-request resolve() draw would scatter them into
+        # tiny sub-batches and defeat micro-batching)
+        groups: Dict[Optional[str], List[int]] = {}
+        for i, s in enumerate(sessions):
+            ep = self.resolve(model, s) if s is not None else None
+            groups.setdefault(ep.name if ep else None, []).append(i)
+        results: List[Any] = [None] * len(reqs)
+        for idxs in groups.values():
+            sub = [reqs[i] for i in idxs]
+
+            def attempt(ep, sub=sub):
+                payloads = [to_provider_payload(r, ep, model) for r in sub]
+                headers = [self.auth.outbound_headers(r, ep) for r in sub]
+                outs = batch_call(ep, payloads, headers)
+                if len(outs) != len(sub):   # broken transport => failover
+                    raise RuntimeError(
+                        f"batch_call returned {len(outs)} results for "
+                        f"{len(sub)} payloads on {ep.name}")
+                return [(from_provider_payload(o, ep), ep) for o in outs]
+
+            try:
+                pairs = self._with_failover(model, sessions[idxs[0]],
+                                            attempt,
+                                            mark_failures=not return_errors)
+            except Exception:
+                if not return_errors:
+                    raise
+                pairs = [one(reqs[i], sessions[i]) for i in idxs]
+            for i, p in zip(idxs, pairs):
+                results[i] = p
+        return results

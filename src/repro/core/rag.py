@@ -48,10 +48,11 @@ class VectorStoreBackend:
                     self.chunks.append(DocChunk(
                         doc_id, piece, self.embed_fn([piece])[0]))
 
-    def vector_search(self, query: str, k: int) -> List[Tuple[int, float]]:
+    def vector_search(self, query: str, k: int,
+                      embed_fn=None) -> List[Tuple[int, float]]:
         if not self.chunks:
             return []
-        q = self.embed_fn([query])[0]
+        q = (embed_fn or self.embed_fn)([query])[0]
         sims = np.stack([c.embedding for c in self.chunks]) @ q
         order = np.argsort(-sims)[:k]
         return [(int(i), float(sims[i])) for i in order]
@@ -69,9 +70,10 @@ class HybridRetriever:
         self.rrf_k = rrf_k
         self.threshold = threshold
 
-    def retrieve(self, query: str, top_k: int = 4) -> List[DocChunk]:
+    def retrieve(self, query: str, top_k: int = 4,
+                 embed_fn=None) -> List[DocChunk]:
         # generic rerank path: expand 4x candidates from vector search
-        cands = self.store.vector_search(query, 4 * top_k)
+        cands = self.store.vector_search(query, 4 * top_k, embed_fn=embed_fn)
         if not cands:
             return []
         idxs = [i for i, _ in cands]
@@ -100,7 +102,8 @@ class HybridRetriever:
 def rag_plugin(req: Request, ctx: Dict[str, Any], cfg: Dict[str, Any]):
     retriever: HybridRetriever = ctx["rag"]
     hits = retriever.retrieve(req.latest_user_text,
-                              top_k=cfg.get("top_k", 4))
+                              top_k=cfg.get("top_k", 4),
+                              embed_fn=ctx.get("embed"))
     if hits:
         block = "Context documents:\n" + "\n---\n".join(
             f"[{c.doc_id}] {c.text}" for c in hits)

@@ -1,33 +1,33 @@
 """SemanticRouter: the end-to-end request pipeline (§12.2).
 
-Stages, in strict order: API translation (Responses -> Chat) -> parse ->
-signal extraction (demand-driven, parallel) -> decision evaluation ->
-fast-response check -> semantic cache -> RAG -> modality -> memory ->
-selection -> system prompt -> headers -> endpoint resolution + outbound
-auth.  Response path: token accounting -> HaluGate -> cache/memory writes ->
+The request path is the staged batch-first pipeline in
+``repro.core.pipeline``: translate -> signals -> decide ->
+request-plugins -> select -> dispatch -> response-plugins -> wrap.
+``route()`` runs one request through the stages (a batch of one);
+``route_batch()`` runs N requests stage-by-stage, sharing one embedding
+plan per batch and micro-batching same-model upstream calls.
+
+Response path: token accounting -> HaluGate -> cache/memory writes ->
 Responses-API re-wrap.
 """
 
 from __future__ import annotations
 
-import time
 import uuid
-from typing import Any, Callable, Dict, List, Optional, Tuple
-
-import numpy as np
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import repro.core.plugins.builtin  # noqa: F401  (registers plugins)
 import repro.core.halugate          # noqa: F401
 import repro.core.memory            # noqa: F401
 import repro.core.rag               # noqa: F401
 from repro.classifiers.backend import get_backend
-from repro.core.decision import DecisionEngine, confidence as rule_conf
+from repro.core.decision import DecisionEngine
 from repro.core.halugate import HaluGate
 from repro.core.memory import MemoryStore
-from repro.core.observability import METRICS, Span
-from repro.core.plugins.base import PluginChain
+from repro.core.pipeline import EmbeddingPlan, run_pipeline
 from repro.core.plugins.builtin import SemanticCache
-from repro.core.providers import AuthFactory, EndpointRouter
+from repro.core.providers import EndpointRouter
 from repro.core.rag import HybridRetriever, VectorStoreBackend
 from repro.core.selection import ReMoM, SelectionContext, get_algorithm
 from repro.core.selection.algorithms import RoutingRecord
@@ -38,11 +38,16 @@ from repro.classifiers.backend import DOMAIN_LABELS
 
 
 class SemanticRouter:
+    # LRU bound on stored Responses-API conversations (plugs unbounded
+    # per-call growth; oldest conversations are evicted first).
+    MAX_RESPONSES_STATE = 512
+
     def __init__(self, config: RouterConfig,
                  call_fn: Optional[Callable] = None):
         """``call_fn(endpoint, payload, headers) -> provider payload`` is the
         transport; defaults to an echo stub (tests) — examples inject the
-        fleet-serving transport."""
+        fleet-serving transport.  A transport exposing a ``batch_call``
+        attribute gets same-model requests micro-batched into one call."""
         self.config = config
         self.backend = get_backend(config.embedding_backend)
         self.signals = SignalEngine(config.signals, self.backend)
@@ -59,7 +64,20 @@ class SemanticRouter:
         self.halugate = HaluGate(self.backend)
         self.call_fn = call_fn or self._echo_call
         self.used_types = config.used_signal_types()
-        self.responses_state: Dict[str, Dict[str, Any]] = {}
+        self.responses_state: "OrderedDict[str, Dict[str, Any]]" = \
+            OrderedDict()
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self):
+        """Release owned resources (the signal engine's thread pool)."""
+        self.signals.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     # -- default transport ---------------------------------------------------
     @staticmethod
@@ -83,6 +101,7 @@ class SemanticRouter:
         if req.previous_response_id:
             state = self.responses_state.get(req.previous_response_id)
             if state:
+                self.responses_state.move_to_end(req.previous_response_id)
                 req.messages = [Message(**m) for m in state["messages"]] + \
                     req.messages
                 req.metadata["pinned_model"] = state.get("model")
@@ -98,107 +117,38 @@ class SemanticRouter:
             [dict(role="assistant", content=resp.content)]
         self.responses_state[rid] = {"messages": history,
                                      "model": resp.model}
+        while len(self.responses_state) > self.MAX_RESPONSES_STATE:
+            self.responses_state.popitem(last=False)
         resp.annotations["output"] = [{"type": "message",
                                        "content": resp.content}]
         return resp
 
-    # -- main entry --------------------------------------------------------------
+    # -- main entries ----------------------------------------------------------
     def route(self, req: Request) -> Tuple[Response, RoutingOutcome]:
-        root = Span("request")
-        t0 = time.perf_counter()
-        req = self._inbound_translate(req)
+        """One request through the staged pipeline (a batch of one);
+        dispatch failures raise, as the monolithic route() always did."""
+        return run_pipeline(self, [req], raise_dispatch_errors=True)[0]
 
-        # 1. signal extraction (demand-driven)
-        sig_span = root.child("signals")
-        sig = self.signals.extract(req, self.used_types or None)
-        for k, m in sig.matches.items():
-            sig_span.child(f"signal:{k}").finish(matched=m.matched,
-                                                 conf=round(m.confidence, 3))
-            METRICS.inc("signal_evaluations_total", type=m.key.type)
-            if m.matched:
-                METRICS.inc("signal_matches_total", type=m.key.type)
-        sig_span.finish()
-
-        # 2. decision evaluation
-        dec_span = root.child("decision")
-        res = self.engine.evaluate(sig)
-        dec_span.finish(decision=res.decision.name if res.decision else None,
-                        confidence=round(res.confidence, 3))
-        outcome = RoutingOutcome(
-            decision=res.decision.name if res.decision else None,
-            model=self.config.default_model, endpoint=None,
-            confidence=res.confidence, signals=sig)
-
-        plugins = dict(self.config.plugin_templates)
-        if res.decision:
-            METRICS.inc("decision_matches_total", decision=res.decision.name)
-            plugins = dict(res.decision.plugins)
-        # request-side plugins imply their response-side halves
-        if "cache" in plugins:
-            plugins.setdefault("cache_write", {"enabled": True})
-        if "memory" in plugins:
-            plugins.setdefault("memory_write", {"enabled": True})
-
-        ctx: Dict[str, Any] = {"cache": self.cache, "memory": self.memory,
-                               "rag": self.rag, "halugate": self.halugate,
-                               "signals": sig, "outcome": {}}
-        chain = PluginChain(plugins, ctx)
-
-        # 3-8. request-path plugins (fast response / cache short-circuit)
-        req, short, ptrace = chain.run_request(req)
-        for t in ptrace:
-            root.child(f"plugin:{t['plugin']}").finish(**t)
-        if short is not None:
-            outcome.fast_response = short
-            outcome.cache_hit = ctx.get("outcome", {}).get("cache_hit", False)
-            short.headers.update(self._signal_headers(sig, res))
-            METRICS.observe("routing_latency_ms",
-                            (time.perf_counter() - t0) * 1e3)
-            root.finish()
-            outcome.trace = [dict(span=s.name, ms=round(s.duration_ms, 3))
-                             for _, s in root.flatten()]
-            return self._outbound_translate(req, short), outcome
-
-        # 9. semantic model selection over the decision's candidate pool
-        model, conf = self._select(req, res, sig)
-        if req.metadata.get("pinned_model"):
-            model = req.metadata["pinned_model"]   # conversation pinning
-        outcome.model = model
-
-        # 10. endpoint resolution + dispatch with failover
-        up_span = root.child("upstream", model=model)
-        resp, ep = self.endpoint_router.dispatch(
-            req, model, self.call_fn, session=req.user)
-        up_span.finish(endpoint=ep.name, provider=ep.provider)
-        outcome.endpoint = ep.name
-        METRICS.inc("model_requests_total", model=model)
-        METRICS.inc("tokens_total",
-                    resp.usage.get("completion_tokens", 0), model=model)
-
-        # response path: halugate -> cache/memory writes
-        resp, rtrace = chain.run_response(req, resp)
-        for t in rtrace:
-            root.child(f"plugin:{t['plugin']}").finish(**t)
-
-        resp.headers.update(self._signal_headers(sig, res))
-        latency = (time.perf_counter() - t0) * 1e3
-        METRICS.observe("routing_latency_ms", latency)
-        METRICS.observe("model_latency_ms", latency, model=model)
-        self.selection_ctx.observe_latency(model, latency)
-        root.finish()
-        outcome.trace = [dict(span=s.name, ms=round(s.duration_ms, 3))
-                         for _, s in root.flatten()]
-        return self._outbound_translate(req, resp), outcome
+    def route_batch(self, reqs: Sequence[Request]
+                    ) -> List[Tuple[Response, RoutingOutcome]]:
+        """N requests stage-by-stage: one shared embedding plan (a single
+        ``backend.embed()`` call covers all query texts) and same-model
+        upstream calls micro-batched into the fleet's batch slots.
+        Dispatch failures are isolated per request (an error Response
+        with ``finish_reason='error'``), never aborting the batch."""
+        return run_pipeline(self, list(reqs))
 
     # ------------------------------------------------------------------
-    def _select(self, req: Request, res, sig) -> Tuple[str, float]:
+    def _select(self, req: Request, res, sig,
+                plan: Optional[EmbeddingPlan] = None) -> Tuple[str, float]:
         if res.decision is None or not res.decision.model_refs:
             return self.config.default_model, 0.0
         cands = [m.name for m in res.decision.model_refs]
         if len(cands) == 1:
             return cands[0], res.confidence
         algo_name = res.decision.algorithm or "static"
-        e_q = self.backend.embed([req.latest_user_text])[0]
+        embed = plan.embed if plan is not None else self.backend.embed
+        e_q = embed([req.latest_user_text])[0]
         z = 0
         for k, m in sig.matches.items():
             lab = m.detail.get("label") if m.detail else None

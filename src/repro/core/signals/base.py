@@ -5,13 +5,19 @@ Only signal types referenced by at least one active decision are computed
 on a thread pool mirroring the paper's goroutine fan-out, with wall-clock =
 max(evaluators) rather than the sum.  Per-signal latency is recorded into
 the SignalMatch for the observability layer.
+
+``extract_many`` is the batch-first entry: learned-signal jobs for N
+requests are submitted as one thread-pool wave, and an optional
+``embed_fn`` (the batch's shared EmbeddingPlan) replaces the backend's
+embed so query texts embedded once per batch are reused by every
+embedding-based evaluator.
 """
 
 from __future__ import annotations
 
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, Iterable, Optional, Set
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
 from repro.classifiers.backend import ClassifierBackend, get_backend
 from repro.core.signals.heuristic import HEURISTIC_EVALUATORS
@@ -38,36 +44,63 @@ class SignalEngine:
         self.learned = LearnedSignals(self.backend)
         self.learned.preload(signals_cfg)
         self.pool = ThreadPoolExecutor(max_workers=max_workers)
+        self._closed = False
 
+    # -- lifecycle -----------------------------------------------------------
+    def close(self):
+        """Shut down the evaluator thread pool (idempotent)."""
+        if not self._closed:
+            self._closed = True
+            self.pool.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ------------------------------------------------------------------
     def _eval_one(self, type_: str, name: str, cfg: Dict[str, Any],
-                  req: Request) -> SignalMatch:
+                  req: Request,
+                  embed_fn: Optional[Callable] = None) -> SignalMatch:
         t0 = time.perf_counter()
         if type_ in HEURISTIC_EVALUATORS:
             m = HEURISTIC_EVALUATORS[type_](name, cfg, req)
         elif type_ in EXTRA_EVALUATORS:
             m = EXTRA_EVALUATORS[type_](name, cfg, req)
         else:
-            m = self.learned.evaluator(type_)(name, cfg, req)
+            m = self.learned.evaluator(type_)(name, cfg, req, embed=embed_fn)
         m.latency_ms = (time.perf_counter() - t0) * 1e3
         return m
 
     def extract(self, req: Request,
-                used_types: Optional[Set[str]] = None) -> SignalResult:
-        """Demand-driven parallel extraction.  ``used_types`` is
-        T_used = union of signal types referenced by active decisions;
+                used_types: Optional[Set[str]] = None,
+                embed_fn: Optional[Callable] = None) -> SignalResult:
+        """Demand-driven parallel extraction for one request.  ``used_types``
+        is T_used = union of signal types referenced by active decisions;
         None means evaluate everything configured."""
-        result = SignalResult()
+        return self.extract_many([req], used_types, embed_fn=embed_fn)[0]
+
+    def extract_many(self, reqs: Sequence[Request],
+                     used_types: Optional[Set[str]] = None,
+                     embed_fn: Optional[Callable] = None
+                     ) -> List[SignalResult]:
+        """Batched extraction: one thread-pool wave covers the learned
+        signals of every request; heuristics stay inline (sub-ms)."""
+        results = [SignalResult() for _ in reqs]
         jobs = []
-        for type_, rules in self.cfg.items():
-            if used_types is not None and type_ not in used_types:
-                continue
-            for name, cfg in rules.items():
-                if type_ in HEURISTIC_TYPES:
-                    result.add(self._eval_one(type_, name, cfg, req))
-                else:
-                    jobs.append((type_, name, cfg))
-        futures = [self.pool.submit(self._eval_one, t, n, c, req)
-                   for t, n, c in jobs]
-        for f in futures:
-            result.add(f.result())
-        return result
+        for i, req in enumerate(reqs):
+            for type_, rules in self.cfg.items():
+                if used_types is not None and type_ not in used_types:
+                    continue
+                for name, cfg in rules.items():
+                    if type_ in HEURISTIC_TYPES:
+                        results[i].add(self._eval_one(type_, name, cfg, req))
+                    else:
+                        jobs.append((i, type_, name, cfg, req))
+        futures = [(i, self.pool.submit(self._eval_one, t, n, c, r, embed_fn))
+                   for i, t, n, c, r in jobs]
+        for i, f in futures:
+            results[i].add(f.result())
+        return results

@@ -1,6 +1,8 @@
 """Learned signals (§3.3): embedding, domain, complexity, jailbreak (BERT +
 contrastive max-chain), PII, fact-check, feedback, modality, preference.
-All neural inference goes through the pluggable ClassifierBackend."""
+All neural inference goes through the pluggable ClassifierBackend; an
+optional per-call ``embed`` override lets a batch's shared EmbeddingPlan
+serve query-text embeddings instead of re-embedding per evaluator."""
 
 from __future__ import annotations
 
@@ -43,17 +45,19 @@ class LearnedSignals:
         return self._ref_cache[key]
 
     # ------------------------------------------------------------------
-    def eval_embedding(self, name, cfg, req: Request) -> SignalMatch:
+    def eval_embedding(self, name, cfg, req: Request,
+                       embed=None) -> SignalMatch:
         refs = self._refs(f"emb:{name}", cfg.get("reference_texts", []))
         thr = cfg.get("threshold", 0.75)
         if refs.shape[0] == 0:
             return SignalMatch(SignalKey("embedding", name), False, 0.0)
-        q = self.backend.embed([req.latest_user_text])[0]
+        q = (embed or self.backend.embed)([req.latest_user_text])[0]
         sim = float(_cos(q[None], refs).max())
         return SignalMatch(SignalKey("embedding", name), sim >= thr,
                            max(0.0, sim), detail={"sim": sim})
 
-    def eval_domain(self, name, cfg, req: Request) -> SignalMatch:
+    def eval_domain(self, name, cfg, req: Request,
+                    embed=None) -> SignalMatch:
         cats = [c.lower() for c in cfg.get("mmlu_categories", [])]
         labels, probs = self.backend.classify("domain",
                                               [req.latest_user_text])
@@ -63,7 +67,8 @@ class LearnedSignals:
                            conf if matched else 0.0,
                            detail={"label": labels[0]})
 
-    def eval_fact_check(self, name, cfg, req: Request) -> SignalMatch:
+    def eval_fact_check(self, name, cfg, req: Request,
+                        embed=None) -> SignalMatch:
         labels, probs = self.backend.classify("fact_check",
                                               [req.latest_user_text])
         thr = cfg.get("threshold", 0.5)
@@ -71,7 +76,8 @@ class LearnedSignals:
         return SignalMatch(SignalKey("fact_check", name),
                            conf >= thr, conf, detail={"label": labels[0]})
 
-    def eval_user_feedback(self, name, cfg, req: Request) -> SignalMatch:
+    def eval_user_feedback(self, name, cfg, req: Request,
+                           embed=None) -> SignalMatch:
         want = cfg.get("categories", ["dissatisfied"])
         labels, probs = self.backend.classify("user_feedback",
                                               [req.latest_user_text])
@@ -81,7 +87,8 @@ class LearnedSignals:
                            conf if matched else 0.0,
                            detail={"label": labels[0]})
 
-    def eval_modality(self, name, cfg, req: Request) -> SignalMatch:
+    def eval_modality(self, name, cfg, req: Request,
+                      embed=None) -> SignalMatch:
         want = cfg.get("modalities", ["diffusion"])
         labels, probs = self.backend.classify("modality",
                                               [req.latest_user_text])
@@ -91,13 +98,14 @@ class LearnedSignals:
                            conf if matched else 0.0,
                            detail={"label": labels[0]})
 
-    def eval_complexity(self, name, cfg, req: Request) -> SignalMatch:
+    def eval_complexity(self, name, cfg, req: Request,
+                        embed=None) -> SignalMatch:
         """Contrastive difficulty (Equation 4)."""
         hard = self._refs(f"cpx_h:{name}", cfg.get("hard_examples", []))
         easy = self._refs(f"cpx_e:{name}", cfg.get("easy_examples", []))
         thr = cfg.get("threshold", 0.08)
         want = cfg.get("level", "hard")
-        q = self.backend.embed([req.latest_user_text])[0]
+        q = (embed or self.backend.embed)([req.latest_user_text])[0]
         sh = float(_cos(q[None], hard).max()) if hard.shape[0] else 0.0
         se = float(_cos(q[None], easy).max()) if easy.shape[0] else 0.0
         delta = sh - se
@@ -110,7 +118,8 @@ class LearnedSignals:
         return SignalMatch(SignalKey("complexity", name), matched, conf,
                            detail={"delta": delta, "level": level})
 
-    def eval_jailbreak(self, name, cfg, req: Request) -> SignalMatch:
+    def eval_jailbreak(self, name, cfg, req: Request,
+                       embed=None) -> SignalMatch:
         method = cfg.get("method", "classifier")
         thr = cfg.get("threshold", 0.65 if method == "classifier" else 0.10)
         include_history = cfg.get("include_history", False)
@@ -129,7 +138,7 @@ class LearnedSignals:
         # contrastive max-chain (Equations 5/22)
         jb = self._refs(f"jb:{name}", cfg.get("jailbreak_examples", []))
         ben = self._refs(f"ben:{name}", cfg.get("benign_examples", []))
-        embs = self.backend.embed(texts)
+        embs = (embed or self.backend.embed)(texts)
         deltas = []
         for e in embs:
             sj = float(_cos(e[None], jb).max()) if jb.shape[0] else 0.0
@@ -141,7 +150,8 @@ class LearnedSignals:
                            detail={"delta": delta, "method": method,
                                    "turns_scored": len(deltas)})
 
-    def eval_pii(self, name, cfg, req: Request) -> SignalMatch:
+    def eval_pii(self, name, cfg, req: Request,
+                 embed=None) -> SignalMatch:
         thr = cfg.get("threshold", 0.5)
         allow = set(cfg.get("pii_types_allowed", []))
         spans = self.backend.token_classify([req.full_text])[0]
@@ -152,12 +162,13 @@ class LearnedSignals:
                            detail={"entities": [l for *_, l, _ in
                                    [(s, e, l, c) for s, e, l, c in viol]]})
 
-    def eval_preference(self, name, cfg, req: Request) -> SignalMatch:
+    def eval_preference(self, name, cfg, req: Request,
+                        embed=None) -> SignalMatch:
         """Personalized routing: query vs per-profile exemplar sets."""
         profiles = cfg.get("profiles", {})
         want = cfg.get("profile", None)
         thr = cfg.get("threshold", 0.3)
-        q = self.backend.embed([req.latest_user_text])[0]
+        q = (embed or self.backend.embed)([req.latest_user_text])[0]
         best, best_p = 0.0, None
         for prof in profiles:
             refs = self._refs(f"pref:{name}:{prof}", profiles[prof])

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _kernel(x_ref, a_ref, b_ref, m_ref, o_ref, acc_scr, *,
             n_tasks: int, scale: float):
@@ -67,7 +69,7 @@ def multi_lora_pallas(x, a, b, task_onehot, *, scale: float = 1.0,
         out_specs=pl.BlockSpec((block_n, dout), lambda ni, t: (ni, 0)),
         out_shape=jax.ShapeDtypeStruct((N, dout), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_n, dout), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, a, b, task_onehot)

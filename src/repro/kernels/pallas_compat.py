@@ -1,0 +1,14 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer JAX releases; kernels import :data:`CompilerParams` from here so
+they build on either side of the rename (jax 0.4.x ships only the
+``TPU``-prefixed name).
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -179,14 +179,20 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
                hlo_bytes=len(hlo))
     if keep_hlo:
         # archive compressed HLO so cost-model improvements can re-analyze
-        # without recompiling (repro/roofline/reanalyze.py)
-        import zstandard as zstd
+        # without recompiling (repro/roofline/reanalyze.py); zstd preferred,
+        # gzip fallback when the container lacks the zstandard module
         tag = f"{arch}__{shape_name}__{mesh_name}"
         if variant != "baseline":
             tag += f"__{variant}"
         os.makedirs(out_dir, exist_ok=True)
-        with open(os.path.join(out_dir, tag + ".hlo.zst"), "wb") as f:
-            f.write(zstd.ZstdCompressor(level=6).compress(hlo.encode()))
+        try:
+            import zstandard as zstd
+            with open(os.path.join(out_dir, tag + ".hlo.zst"), "wb") as f:
+                f.write(zstd.ZstdCompressor(level=6).compress(hlo.encode()))
+        except ImportError:
+            import gzip
+            with open(os.path.join(out_dir, tag + ".hlo.gz"), "wb") as f:
+                f.write(gzip.compress(hlo.encode(), compresslevel=6))
     return rec, rl
 
 

@@ -104,26 +104,37 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--gen-tokens", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="micro-batch size for route_batch(); 0 = "
+                         "sequential route() per request")
     args = ap.parse_args(argv)
 
     router, fleet = build_router(gen_tokens=args.gen_tokens)
+    reqs = [Request(messages=[Message(
+                "user", DEMO_REQUESTS[i % len(DEMO_REQUESTS)])],
+                user=f"user{i % 3}")
+            for i in range(args.requests)]
     t0 = time.time()
-    n = 0
-    for i in range(args.requests):
+    results = []
+    if args.batch > 0:
+        for s in range(0, len(reqs), args.batch):
+            results.extend(router.route_batch(reqs[s: s + args.batch]))
+    else:
+        results = [router.route(r) for r in reqs]
+    n = len(results)
+    for i, (resp, out) in enumerate(results):
         text = DEMO_REQUESTS[i % len(DEMO_REQUESTS)]
-        resp, out = router.route(Request(messages=[Message("user", text)],
-                                         user=f"user{i % 3}"))
-        n += 1
         print(f"[{i:02d}] {text[:52]:54s} -> {out.decision or '-':14s} "
               f"model={out.model:14s} "
               f"{'FAST' if out.fast_response else 'gen '} "
               f"cache={'H' if out.cache_hit else '.'}")
     dt = time.time() - t0
     print(f"\n{n} requests in {dt:.1f}s ({n / dt:.1f} req/s)  "
-          f"cache_hit_rate={router.cache.hit_rate:.2f}")
+          f"cache_hit_rate={router.cache.hit_rate:.2f}  "
+          f"mode={'batch=%d' % args.batch if args.batch else 'sequential'}")
     for arch, m in fleet.members.items():
         print(f"  backend {arch:22s} calls={m.calls:3d} "
-              f"tokens={m.tokens_out}")
+              f"tokens={m.tokens_out} slots/call={m.slots_per_call:.2f}")
     from repro.core.observability import METRICS
     print("\nmetrics scrape (head):")
     print("\n".join(METRICS.scrape().splitlines()[:12]))

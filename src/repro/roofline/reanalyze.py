@@ -2,17 +2,17 @@
 
   PYTHONPATH=src python -m repro.roofline.reanalyze [--raw experiments/raw]
 
-Reads every <tag>.hlo.zst, reruns the (possibly improved) text cost model,
-and rewrites the matching <tag>.json roofline fields in place.
+Reads every <tag>.hlo.zst (or the <tag>.hlo.gz gzip fallback written when
+the zstandard module is unavailable), reruns the (possibly improved) text
+cost model, and rewrites the matching <tag>.json roofline fields in place.
 """
 
 from __future__ import annotations
 
 import argparse
+import gzip
 import json
 import os
-
-import zstandard as zstd
 
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES
@@ -21,9 +21,23 @@ from repro.roofline.analysis import Roofline, summarize
 from repro.roofline.hlo_cost import analyze
 
 
+def _read_hlo(raw_dir: str, tag: str) -> str:
+    zst_path = os.path.join(raw_dir, tag + ".hlo.zst")
+    gz_path = os.path.join(raw_dir, tag + ".hlo.gz")
+    if os.path.exists(zst_path):
+        try:
+            import zstandard as zstd
+            with open(zst_path, "rb") as f:
+                return zstd.ZstdDecompressor().decompress(f.read()).decode()
+        except ImportError:
+            if not os.path.exists(gz_path):   # no usable fallback archive
+                raise
+    with open(gz_path, "rb") as f:
+        return gzip.decompress(f.read()).decode()
+
+
 def reanalyze_file(raw_dir: str, tag: str) -> dict:
-    with open(os.path.join(raw_dir, tag + ".hlo.zst"), "rb") as f:
-        hlo = zstd.ZstdDecompressor().decompress(f.read()).decode()
+    hlo = _read_hlo(raw_dir, tag)
     with open(os.path.join(raw_dir, tag + ".json")) as f:
         rec = json.load(f)
     hc = analyze(hlo)
@@ -55,10 +69,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--raw", default="experiments/raw")
     args = ap.parse_args()
-    tags = sorted(fn[:-8] for fn in os.listdir(args.raw)
-                  if fn.endswith(".hlo.zst"))
+    tags = sorted({fn.rsplit(".hlo.", 1)[0] for fn in os.listdir(args.raw)
+                   if fn.endswith((".hlo.zst", ".hlo.gz"))})
     for tag in tags:
-        rec = reanalyze_file(args.raw, tag)
+        try:
+            rec = reanalyze_file(args.raw, tag)
+        except ImportError as e:     # .zst archive but no zstandard module
+            print(f"SKIP {tag}: {e}", flush=True)
+            continue
         rl = Roofline(rec["arch"], rec["shape"], rec["mesh"], rec["chips"],
                       rec["flops_per_device"], rec["bytes_per_device"],
                       rec["collective_bytes_per_device"],

@@ -49,6 +49,12 @@ class FleetMember:
     max_seq: int
     calls: int = 0
     tokens_out: int = 0
+    prompts_in: int = 0        # real (non-padding) prompts across all calls
+
+    @property
+    def slots_per_call(self) -> float:
+        """Mean real prompts per generate() call — batch-slot utilisation."""
+        return self.prompts_in / max(1, self.calls)
 
 
 class LocalFleet:
@@ -80,6 +86,7 @@ class LocalFleet:
         prompt_len = m.max_seq - self.gen_tokens - 1
         rows = [hash_tokens(p, cfg.vocab_size, prompt_len)
                 for p in prompts[: m.batch]]
+        m.prompts_in += len(rows)
         L = max(len(r) for r in rows)
         toks = np.zeros((m.batch, L), np.int32)
         for i, r in enumerate(rows):
@@ -116,7 +123,13 @@ class LocalFleet:
 
     # -- router transport -----------------------------------------------------
     def call_fn(self, model_to_arch: Dict[str, str]):
-        def call(ep, payload, headers):
+        """Router transport with micro-batching: the returned callable
+        serves single requests; its ``batch_call`` attribute takes a list
+        of same-endpoint payloads, groups them by backend arch, and fills
+        the fixed batch slots of each ``generate()`` call with real
+        prompts (chunking when a group exceeds the slot count)."""
+
+        def _resolve(payload):
             model = payload.get("model") or payload.get("modelId", "")
             arch = model_to_arch.get(model, model)
             if arch not in self.members:
@@ -124,10 +137,36 @@ class LocalFleet:
             msgs = payload.get("messages") or \
                 payload.get("body", {}).get("messages") or []
             prompt = msgs[-1]["content"] if msgs else ""
-            out = self.generate(arch, [prompt])[0]
+            return model, arch, prompt
+
+        def _wrap(model, prompt, out):
             return {"choices": [{"message": {"content": out["content"]},
                                  "finish_reason": "stop"}],
                     "model": model,
                     "usage": {"prompt_tokens": len(prompt) // 4,
                               "completion_tokens": len(out["tokens"])}}
+
+        def call(ep, payload, headers):
+            model, arch, prompt = _resolve(payload)
+            out = self.generate(arch, [prompt])[0]
+            return _wrap(model, prompt, out)
+
+        def batch_call(ep, payloads, headers_list):
+            resolved = [_resolve(p) for p in payloads]
+            by_arch: Dict[str, List[int]] = {}
+            for i, (_, arch, _) in enumerate(resolved):
+                by_arch.setdefault(arch, []).append(i)
+            results: List[Optional[dict]] = [None] * len(payloads)
+            for arch, idxs in by_arch.items():
+                slots = self.members[arch].batch
+                for s in range(0, len(idxs), slots):      # micro-batches
+                    chunk = idxs[s: s + slots]
+                    prompts = [resolved[i][2] for i in chunk]
+                    outs = self.generate(arch, prompts)
+                    for i, out in zip(chunk, outs):
+                        model, _, prompt = resolved[i]
+                        results[i] = _wrap(model, prompt, out)
+            return results
+
+        call.batch_call = batch_call
         return call

@@ -6,7 +6,8 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip("hypothesis")   # property tests skip cleanly
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.decision import (DecisionEngine, and_, build_batch_evaluator,
                                  confidence, coverage_analysis, eval_crisp,

@@ -4,7 +4,8 @@ round-trip fixed point (incl. a hypothesis-generated config sweep)."""
 import json
 
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip("hypothesis")   # property tests skip cleanly
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.decision import and_, leaf, not_, or_
 from repro.core.dsl import (compile_source, decompile, emit_crd, emit_helm,

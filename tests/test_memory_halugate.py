@@ -5,7 +5,8 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip("hypothesis")   # property tests skip cleanly
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.classifiers.backend import HashBackend
 from repro.core.halugate import HaluGate
