@@ -17,8 +17,8 @@ def main() -> None:
     from benchmarks import (roofline_table, t4_signal_latency,
                             t5_attention_scaling, t8_lora_memory,
                             t9_scenarios, t_batch_throughput,
-                            t_cache_effectiveness, t_decision_overhead,
-                            t_halugate_cost)
+                            t_cache_effectiveness, t_continuous_batching,
+                            t_decision_overhead, t_halugate_cost)
     suites = {
         "t4": t4_signal_latency.run,
         "t5": t5_attention_scaling.run,
@@ -28,6 +28,7 @@ def main() -> None:
         "cache": t_cache_effectiveness.run,
         "halugate": t_halugate_cost.run,
         "batch": t_batch_throughput.run,
+        "contbatch": t_continuous_batching.run,
         "roofline": roofline_table.run,
     }
     only = set(args.only.split(",")) if args.only else None

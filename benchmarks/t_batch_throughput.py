@@ -116,10 +116,10 @@ def run():
         ("batch_sequential_route", dt_seq / N_REQUESTS * 1e6,
          f"qps={N_REQUESTS / dt_seq:.1f} "
          f"embed_calls_per_req={seq_embeds / N_REQUESTS:.2f} "
-         f"slots_per_generate={seq_slots:.2f}"),
+         f"prompts_per_drain={seq_slots:.2f}"),
         ("batch_route_batch", dt_bat / N_REQUESTS * 1e6,
          f"qps={N_REQUESTS / dt_bat:.1f} "
          f"embed_calls_per_req={bat_embeds / N_REQUESTS:.2f} "
-         f"slots_per_generate={bat_slots:.2f} "
+         f"prompts_per_drain={bat_slots:.2f} "
          f"speedup={dt_seq / dt_bat:.2f}x"),
     ]

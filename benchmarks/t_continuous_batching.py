@@ -1,0 +1,127 @@
+"""Continuous batching under staggered arrivals: time-to-first-token and
+QPS for the slot-scheduler fleet vs the PR 1 micro-batched baseline.
+
+Both policies run on the SAME fleet and jitted steps; the only difference
+is admission:
+
+* ``cycle`` (PR 1 baseline): arrivals queue outside the model; every
+  ``generate()`` drain is a closed prefill+decode cycle, so a prompt that
+  arrives mid-cycle waits for the whole cycle to finish before its
+  prefill starts.
+* ``continuous``: every arrival is submitted to the scheduler
+  immediately and is prefilled into a free slot of the in-flight decode
+  batch at the next step boundary.
+
+  PYTHONPATH=src python -m benchmarks.t_continuous_batching [--smoke]
+"""
+
+import argparse
+import time
+
+ARCH = "smollm-360m"
+
+
+def _arrivals(n, gap_ms):
+    return [i * gap_ms / 1e3 for i in range(n)]
+
+
+def _prompts(n):
+    pool = [
+        "debug this python function it raises an error number {i}",
+        "prove the convergence of the geometric series case {i}",
+        "summarize the incident report for service {i} tonight",
+        "what is the capital of france question {i}",
+    ]
+    return [pool[i % len(pool)].format(i=i) for i in range(n)]
+
+
+def _run_cycle(fleet, prompts, offsets):
+    """PR 1 policy: micro-batched generate() cycles; mid-cycle arrivals
+    wait for the next cycle."""
+    slots = fleet.members[ARCH].batch
+    t0 = time.perf_counter()
+    pending = list(range(len(prompts)))
+    ttft = [0.0] * len(prompts)
+    while pending:
+        now = time.perf_counter() - t0
+        due = [i for i in pending if offsets[i] <= now]
+        if not due:
+            time.sleep(max(0.0, offsets[pending[0]] - now))
+            continue
+        cycle = due[:slots]                      # one closed generate() cycle
+        t_sub = time.perf_counter()
+        outs = fleet.generate(ARCH, [prompts[i] for i in cycle])
+        for i, out in zip(cycle, outs):
+            wait_ms = (t_sub - t0 - offsets[i]) * 1e3
+            ttft[i] = wait_ms + out["ttft_ms"]
+        pending = [i for i in pending if i not in cycle]
+    total_s = time.perf_counter() - t0
+    return ttft, total_s
+
+
+def _run_continuous(fleet, prompts, offsets):
+    """Continuous policy: submit on arrival, step the in-flight batch."""
+    sched = fleet.schedulers[ARCH]
+    fleet.members[ARCH].calls += 1
+    t0 = time.perf_counter()
+    order = {}
+    pending = list(range(len(prompts)))
+    ttft = [0.0] * len(prompts)
+    n_done = 0
+    while n_done < len(prompts):
+        now = time.perf_counter() - t0
+        while pending and offsets[pending[0]] <= now:
+            i = pending.pop(0)
+            order[fleet._submit(ARCH, [prompts[i]])[0]] = i
+        if sched.pending:
+            for seq in sched.step():
+                ttft[order[seq.rid]] = seq.ttft_ms
+                n_done += 1
+        elif pending:
+            time.sleep(max(0.0, offsets[pending[0]] - now))
+    total_s = time.perf_counter() - t0
+    return ttft, total_s
+
+
+def run(n=16, gap_ms=5.0, gen_tokens=32):
+    from repro.serving.fleet import LocalFleet
+    fleet = LocalFleet([ARCH], reduced=True, gen_tokens=gen_tokens, batch=4)
+    prompts, offsets = _prompts(n), _arrivals(n, gap_ms)
+
+    ttft_cyc, s_cyc = _run_cycle(fleet, prompts, offsets)
+    sched = fleet.schedulers[ARCH]
+    d0, s0 = sched.decode_steps, sched.slot_steps   # exclude cycle's steps
+    ttft_con, s_con = _run_continuous(fleet, prompts, offsets)
+    mean = lambda xs: sum(xs) / len(xs)
+    p95 = lambda xs: sorted(xs)[int(0.95 * (len(xs) - 1))]
+    occ = (sched.slot_steps - s0) / max(1, sched.decode_steps - d0)
+    return [
+        ("contbatch_cycle_ttft", mean(ttft_cyc) * 1e3,
+         f"mean_ttft_ms={mean(ttft_cyc):.1f} p95={p95(ttft_cyc):.1f} "
+         f"qps={n / s_cyc:.1f}"),
+        ("contbatch_continuous_ttft", mean(ttft_con) * 1e3,
+         f"mean_ttft_ms={mean(ttft_con):.1f} p95={p95(ttft_con):.1f} "
+         f"qps={n / s_con:.1f} occupancy={occ:.2f} "
+         f"ttft_speedup={mean(ttft_cyc) / max(1e-9, mean(ttft_con)):.2f}x"),
+    ]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI run (fewer requests / tokens)")
+    ap.add_argument("--requests", type=int, default=0)
+    args = ap.parse_args(argv)
+    n = args.requests or (6 if args.smoke else 16)
+    rows = run(n=n, gen_tokens=8 if args.smoke else 32)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    mean_cyc, mean_con = rows[0][1], rows[1][1]
+    ok = mean_con < mean_cyc
+    print(f"continuous < cycle mean TTFT: {ok}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -66,7 +66,13 @@ class EmbeddingPlan:
         self._lock = threading.Lock()
 
     def _fill(self, texts: Sequence[str]):
-        missing = [t for t in dict.fromkeys(texts) if t not in self.memo]
+        """One base call covering ``texts`` plus anything pending.  Any
+        fill clears ``_pending``: once a text has been embedded (by this
+        call or an earlier ``prime``) it must never ride along in a later
+        base call again."""
+        missing = [t for t in dict.fromkeys([*self._pending, *texts])
+                   if t not in self.memo]
+        self._pending = []
         if not missing:
             return
         embs = self.base(missing)
@@ -75,9 +81,14 @@ class EmbeddingPlan:
             self.memo[t] = e
 
     def register(self, texts: Sequence[str]):
-        """Record texts to piggyback on the first miss-triggered call."""
+        """Record texts to piggyback on the first miss-triggered call.
+        Deduplicated against both the memo and already-pending texts, so
+        repeated registration cannot grow the base call."""
         with self._lock:
-            self._pending.extend(t for t in texts if t not in self.memo)
+            pending = set(self._pending)
+            self._pending.extend(
+                t for t in dict.fromkeys(texts)
+                if t not in self.memo and t not in pending)
 
     def prime(self, texts: Sequence[str]):
         """One batched base call for every not-yet-seen text."""
@@ -88,8 +99,7 @@ class EmbeddingPlan:
         """Drop-in replacement for ``backend.embed`` backed by the memo."""
         with self._lock:
             if any(t not in self.memo for t in texts):
-                self._fill(self._pending + list(texts))
-                self._pending = []
+                self._fill(texts)
             return np.stack([self.memo[t] for t in texts])
 
 
@@ -242,10 +252,13 @@ def stage_dispatch(router, ctxs: List[RequestContext]):
             resp, ep = out
             span.finish(endpoint=ep.name, provider=ep.provider)
             c.response = resp
-            # the group's dispatch wall clock: excludes other models'
-            # groups, but is an UPPER bound on this request's own service
-            # time when the group spans several transport chunks
-            c.upstream_ms = group_ms
+            # per-request service time straight from the transport when it
+            # reports one (LocalFleet: scheduler submit->finish, compile
+            # excluded); otherwise the group's dispatch wall clock — an
+            # UPPER bound on this request's own service time when the
+            # group spans several transport chunks
+            c.upstream_ms = float(resp.usage.get("vsr_service_ms",
+                                                 group_ms))
             c.outcome.endpoint = ep.name
             METRICS.inc("model_requests_total", model=model)
             METRICS.inc("tokens_total",

@@ -244,11 +244,16 @@ class EndpointRouter:
         """Micro-batched dispatch: when the transport exposes a
         ``batch_call(ep, payloads, headers_list) -> payloads`` attribute,
         same-model requests sharing a sticky endpoint become ONE batched
-        upstream call (the local fleet fills its fixed batch slots instead
-        of padding them).  Requests whose sessions resolve to different
-        endpoints keep their affinity — they form separate sub-batches.
-        Transports without batch support fall back to per-request
-        ``dispatch`` with identical semantics.
+        upstream call of ANY size — the transport owns its own admission
+        (the local fleet queues payloads into its continuous-batching
+        scheduler and its slot pool is the batching boundary; nothing is
+        chunked or dropped here).  Requests whose sessions resolve to
+        different endpoints keep their affinity — they form separate
+        sub-batches.  Transports without batch support fall back to
+        per-request ``dispatch`` with identical semantics.  Transports
+        may report per-request service time in
+        ``usage["vsr_service_ms"]``; the pipeline prefers it over batch
+        wall clock for latency-aware selection.
 
         With ``return_errors`` a failure is isolated to the requests it
         belongs to: the failing sub-batch is retried one-by-one and the

@@ -107,6 +107,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=0,
                     help="micro-batch size for route_batch(); 0 = "
                          "sequential route() per request")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="serve concurrently arriving requests through the "
+                         "arrival-window coalescing front-end")
+    ap.add_argument("--window-ms", type=float, default=15.0,
+                    help="front-end arrival-coalescing window (async mode)")
+    ap.add_argument("--stagger-ms", type=float, default=3.0,
+                    help="inter-arrival gap for the async demo workload")
     args = ap.parse_args(argv)
 
     router, fleet = build_router(gen_tokens=args.gen_tokens)
@@ -116,7 +123,16 @@ def main(argv=None):
             for i in range(args.requests)]
     t0 = time.time()
     results = []
-    if args.batch > 0:
+    if args.async_mode:
+        from repro.serving.frontend import AsyncFrontend
+        fe = AsyncFrontend(router, window_ms=args.window_ms)
+        futs = []
+        for r in reqs:                      # staggered concurrent arrivals
+            futs.append(fe.submit(r))
+            time.sleep(args.stagger_ms / 1e3)
+        results = [f.result() for f in futs]
+        fe.close()
+    elif args.batch > 0:
         for s in range(0, len(reqs), args.batch):
             results.extend(router.route_batch(reqs[s: s + args.batch]))
     else:
@@ -129,12 +145,19 @@ def main(argv=None):
               f"{'FAST' if out.fast_response else 'gen '} "
               f"cache={'H' if out.cache_hit else '.'}")
     dt = time.time() - t0
+    mode = ("async window=%.0fms" % args.window_ms if args.async_mode
+            else "batch=%d" % args.batch if args.batch else "sequential")
     print(f"\n{n} requests in {dt:.1f}s ({n / dt:.1f} req/s)  "
-          f"cache_hit_rate={router.cache.hit_rate:.2f}  "
-          f"mode={'batch=%d' % args.batch if args.batch else 'sequential'}")
+          f"cache_hit_rate={router.cache.hit_rate:.2f}  mode={mode}")
+    if args.async_mode:
+        print(f"  frontend: {fe.stats.batches} batches, "
+              f"mean size {fe.stats.mean_batch:.2f} "
+              f"(sizes {fe.stats.batch_sizes})")
     for arch, m in fleet.members.items():
+        occ = fleet.schedulers[arch].occupancy
         print(f"  backend {arch:22s} calls={m.calls:3d} "
-              f"tokens={m.tokens_out} slots/call={m.slots_per_call:.2f}")
+              f"tokens={m.tokens_out} prompts/drain={m.slots_per_call:.2f} "
+              f"occupancy={occ:.2f}")
     from repro.core.observability import METRICS
     print("\nmetrics scrape (head):")
     print("\n".join(METRICS.scrape().splitlines()[:12]))

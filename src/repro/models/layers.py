@@ -126,14 +126,49 @@ def sdpa_blocked(q: Array, k: Array, v: Array, *, causal: bool,
         .astype(q.dtype)
 
 
+def _attn_mask(B: int, Sq: int, Skv: int, *, causal: bool,
+               sliding_window: int = 0, q_offset=0,
+               kv_len: Optional[Array] = None):
+    """Attention mask shared by ``sdpa`` and ``mla_attention``.
+
+    ``q_offset`` / ``kv_len`` may be scalars (uniform across the batch) or
+    (B,) vectors (per-row positions, continuous-batching decode).  Returns
+    ``(mask, per_row)``: ``mask`` is (Sq, Skv) when ``per_row`` is False
+    and (B, Sq, Skv) when True — the caller inserts its own head axes
+    (``mask[:, None, ...]`` vs ``mask[None, ...]``) before masking logits.
+    """
+    per_row = jnp.ndim(q_offset) > 0 or (
+        kv_len is not None and jnp.ndim(kv_len) > 0)
+    if per_row:
+        off = jnp.broadcast_to(jnp.asarray(q_offset), (B,))
+        iq = off[:, None, None] + jnp.arange(Sq)[None, :, None]  # (B,Sq,1)
+        ik = jnp.arange(Skv)[None, None, :]                      # (1,1,Skv)
+        mask = jnp.ones((B, Sq, Skv), dtype=bool)
+    else:
+        iq = jnp.arange(Sq)[:, None] + q_offset          # (Sq, 1) absolute
+        ik = jnp.arange(Skv)[None, :]                    # (1, Skv)
+        mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= ik <= iq
+    if sliding_window > 0:
+        mask &= ik > iq - sliding_window
+    if kv_len is not None:
+        kl = jnp.asarray(kv_len)
+        if per_row:
+            kl = jnp.broadcast_to(kl, (B,))[:, None, None]
+        mask &= ik < kl
+    return mask, per_row
+
+
 def sdpa(q: Array, k: Array, v: Array, *, causal: bool,
          sliding_window: int = 0, q_offset=0, kv_len: Optional[Array] = None,
          logit_dtype=jnp.float32) -> Array:
     """Grouped-query attention.
 
     q: (B, Sq, Hq, hd); k/v: (B, Skv, Hkv, hd); Hq = G * Hkv.
-    ``q_offset``: absolute position of q[0] (int or traced scalar) for causal
-    masking against a cache.  ``kv_len``: valid KV prefix length (decode).
+    ``q_offset``: absolute position of q[0] for causal masking against a
+    cache — an int, a traced scalar, or a (B,) vector of per-row positions.
+    ``kv_len``: valid KV prefix length (decode), scalar or (B,).
     """
     B, Sq, Hq, hd = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
@@ -144,16 +179,11 @@ def sdpa(q: Array, k: Array, v: Array, *, causal: bool,
     logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
                         preferred_element_type=logit_dtype) * scale
 
-    iq = jnp.arange(Sq)[:, None] + q_offset          # (Sq, 1) absolute
-    ik = jnp.arange(Skv)[None, :]                    # (1, Skv)
-    mask = jnp.ones((Sq, Skv), dtype=bool)
-    if causal:
-        mask &= ik <= iq
-    if sliding_window > 0:
-        mask &= ik > iq - sliding_window
-    if kv_len is not None:
-        mask &= ik < kv_len
-    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    mask, per_row = _attn_mask(B, Sq, Skv, causal=causal,
+                               sliding_window=sliding_window,
+                               q_offset=q_offset, kv_len=kv_len)
+    mask = mask[:, None, None] if per_row else mask[None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
 
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
@@ -268,14 +298,10 @@ def mla_attention(p: dict, cfg: ModelConfig, q_nope, q_rope, c_kv, k_rope,
                         preferred_element_type=jnp.float32)
     logits = (s_lat + s_rope) * scale
 
-    iq = jnp.arange(Sq)[:, None] + q_offset
-    ik = jnp.arange(Skv)[None, :]
-    mask = jnp.ones((Sq, Skv), dtype=bool)
-    if causal:
-        mask &= ik <= iq
-    if kv_len is not None:
-        mask &= ik < kv_len
-    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    mask, per_row = _attn_mask(B, Sq, Skv, causal=causal,
+                               q_offset=q_offset, kv_len=kv_len)
+    mask = mask[:, None] if per_row else mask[None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(c_kv.dtype)
 
     ctx = jnp.einsum("bhqk,bkr->bqhr", probs, c_kv)               # (B,Sq,H,r)

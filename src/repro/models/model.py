@@ -138,6 +138,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
 # block application
 # ===========================================================================
 
+def _cache_write(buf: Array, val: Array, pos) -> Array:
+    """Write ``val`` (B, 1, ...) into ``buf`` (B, S, ...) at sequence
+    position ``pos`` — a scalar (uniform across the batch) or a (B,) vector
+    of per-row positions (continuous-batching decode, where every row sits
+    at its own depth in the sequence)."""
+    val = val.astype(buf.dtype)
+    if jnp.ndim(pos) == 0:
+        return jax.lax.dynamic_update_slice(
+            buf, val, (0, pos) + (0,) * (buf.ndim - 2))
+    return jax.vmap(
+        lambda b, v, p: jax.lax.dynamic_update_slice(
+            b, v, (p,) + (0,) * (b.ndim - 1)))(buf, val, pos)
+
 def _sdpa_impl(cfg, q, k, v, **kw):
     if cfg.attn_impl == "blocked" and q.shape[1] > 1:
         kw.pop("logit_dtype", None)
@@ -182,18 +195,16 @@ def _self_attn(cfg, p, h, rope, mode, bcache, pos, bidir=False):
                 bcache["v"], v.astype(bcache["v"].dtype), (0, pos, 0, 0)),
         }
         return h + L.attn_out(p["attn"], out), new_cache
-    # decode
-    if cfg.decode_impl == "shardmap":
+    # decode (pos: scalar, or (B,) per-row positions for continuous batching)
+    if cfg.decode_impl == "shardmap" and jnp.ndim(pos) == 0:
         from repro.models import smdec
         res = smdec.gqa_decode_sm(cfg, q, k, v, bcache["k"], bcache["v"],
                                   pos)
         if res is not None:
             out, ck, cv = res
             return h + L.attn_out(p["attn"], out), {"k": ck, "v": cv}
-    ck = jax.lax.dynamic_update_slice(
-        bcache["k"], k.astype(bcache["k"].dtype), (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(
-        bcache["v"], v.astype(bcache["v"].dtype), (0, pos, 0, 0))
+    ck = _cache_write(bcache["k"], k, pos)
+    cv = _cache_write(bcache["v"], v, pos)
     out = L.sdpa(q, ck, cv, causal=False, q_offset=pos, kv_len=pos + 1,
                  sliding_window=0)
     return h + L.attn_out(p["attn"], out), {"k": ck, "v": cv}
@@ -238,7 +249,8 @@ def _mla_attn(cfg, p, h, rope, mode, bcache, pos):
         out = _mla_naive(cfg, mp, q_nope, q_rope, c_kv, k_rope)
         return h + out, new_cache
     # decode: absorbed latent attention against the compressed cache
-    if cfg.decode_impl == "shardmap":
+    # (pos: scalar, or (B,) per-row positions for continuous batching)
+    if cfg.decode_impl == "shardmap" and jnp.ndim(pos) == 0:
         from repro.models import smdec
         B, Sq, H, _ = q_nope.shape
         q_lat = jnp.einsum("bqhn,hrn->bqhr", q_nope, mp["wk_b"])
@@ -249,10 +261,8 @@ def _mla_attn(cfg, p, h, rope, mode, bcache, pos):
             out = jnp.einsum("bqhr,hrv->bqhv", ctx, mp["wv_b"])
             out = out.reshape(B, Sq, H * cfg.v_head_dim) @ mp["wo"]
             return h + out, {"ckv": ckv, "krope": krope}
-    ckv = jax.lax.dynamic_update_slice(
-        bcache["ckv"], c_kv.astype(bcache["ckv"].dtype), (0, pos, 0))
-    krope = jax.lax.dynamic_update_slice(
-        bcache["krope"], k_rope.astype(bcache["krope"].dtype), (0, pos, 0))
+    ckv = _cache_write(bcache["ckv"], c_kv, pos)
+    krope = _cache_write(bcache["krope"], k_rope, pos)
     out = L.mla_attention(mp, cfg, q_nope, q_rope, ckv, krope,
                           causal=False, q_offset=pos, kv_len=pos + 1)
     return h + out, {"ckv": ckv, "krope": krope}
@@ -401,9 +411,14 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array,
 
 
 def prefill(cfg: ModelConfig, params: dict, tokens: Array, cache: dict,
-            cross_ctx: Optional[Array] = None, *, moe_impl: str = "gshard"
-            ) -> Tuple[Array, dict]:
-    """Prefill from position 0: returns (last-token logits (B,V), cache)."""
+            cross_ctx: Optional[Array] = None, *, moe_impl: str = "gshard",
+            lens: Optional[Array] = None) -> Tuple[Array, dict]:
+    """Prefill from position 0: returns (last-token logits (B,V), cache).
+
+    ``lens`` (B,) gives each row's real prompt length when rows are
+    right-padded to a common width: logits are gathered at ``lens - 1``
+    (each row's last REAL token) instead of the padded final position, so
+    a short row's next token is never conditioned on pad embeddings."""
     h = params["embed"][tokens]
     h = constrain(h, "act.res")
     Sq = tokens.shape[1]
@@ -414,17 +429,31 @@ def prefill(cfg: ModelConfig, params: dict, tokens: Array, cache: dict,
                                   cross_ctx=cross, mode="prefill", cache=cache,
                                   pos=0, moe_impl=moe_impl, remat=False)
     new_cache["pos"] = jnp.asarray(Sq, jnp.int32)
-    logits = _logits(cfg, params, h[:, -1:, :])[:, 0, :]
+    if lens is None:
+        h_last = h[:, -1:, :]
+    else:
+        idx = jnp.asarray(lens, jnp.int32) - 1                   # (B,)
+        h_last = jnp.take_along_axis(
+            h, jnp.broadcast_to(idx[:, None, None],
+                                (h.shape[0], 1, h.shape[2])), axis=1)
+    logits = _logits(cfg, params, h_last)[:, 0, :]
     return logits, new_cache
 
 
 def decode_step(cfg: ModelConfig, params: dict, tokens: Array, cache: dict,
                 *, moe_impl: str = "gshard") -> Tuple[Array, dict]:
-    """One decode step: tokens (B,1) + cache -> (logits (B,V), cache)."""
+    """One decode step: tokens (B,1) + cache -> (logits (B,V), cache).
+
+    ``cache["pos"]`` is either a scalar (every row at the same depth — the
+    legacy uniform path) or a (B,) vector of per-row positions, in which
+    case each row's KV write, rope phase, and attention mask use that
+    row's own depth (continuous batching: rows prefilled at different
+    times decode side by side)."""
     pos = cache["pos"]
     h = params["embed"][tokens]
     rope_dim = cfg.rope_head_dim if cfg.is_mla else cfg.head_dim
-    rope = L.rope_tables(pos[None], rope_dim, cfg.rope_theta)
+    rope_pos = pos[None] if jnp.ndim(pos) == 0 else pos[:, None]  # (B,1)
+    rope = L.rope_tables(rope_pos, rope_dim, cfg.rope_theta)
     h, new_cache, _ = _run_groups(cfg, params, h, cfg.groups, "g", rope=rope,
                                   cross_ctx=None, mode="decode", cache=cache,
                                   pos=pos, moe_impl=moe_impl, remat=False)

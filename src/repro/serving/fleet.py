@@ -1,19 +1,38 @@
 """LocalFleet: in-process model backends for end-to-end router serving.
 
 Each fleet member is a (reduced or full) assigned-arch config with jitted
-prefill + decode steps and a KV/SSM cache pool; ``call_fn`` adapts the fleet
-to the router's provider transport so the whole §12 pipeline — signals,
-decisions, plugins, selection, endpoint failover — executes against real
-JAX model steps.  Content is synthetic (hash tokenizer, random weights); the
-systems path (batched prefill/decode, cache reuse, per-model latency
-metrics) is real.
+single-row prefill + slot-batched decode steps and a persistent KV/SSM
+cache pool driven by a continuous-batching :class:`DecodeScheduler`
+(`serving/scheduler.py`): new prompts are prefilled into free slots of the
+in-flight decode batch instead of waiting for a full ``generate()`` cycle.
+``call_fn`` adapts the fleet to the router's provider transport so the
+whole §12 pipeline — signals, decisions, plugins, selection, endpoint
+failover — executes against real JAX model steps.  Content is synthetic
+(hash tokenizer, random weights); the systems path (slot admission,
+per-row-position decode, cache reuse, per-request latency metrics) is
+real.
+
+Correctness guarantees over the old monolithic ``generate()``:
+
+* rows are never decoded from pad tokens — admission prefill samples at
+  each row's last REAL token and decode runs with per-row positions, so a
+  short prompt in a mixed-length batch produces exactly the tokens it
+  would produce alone;
+* overflow prompts are queued, not silently dropped — ``generate()``
+  accepts any number of prompts and the scheduler admits them as slots
+  free up;
+* JIT compilation happens at fleet construction (``warmup=True``), so
+  first-call latency metrics no longer fold compile time into
+  ``ttft_ms``/``tpot_ms`` and latency-aware selection is not skewed
+  against the first model used.
 """
 
 from __future__ import annotations
 
 import hashlib
+import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax
@@ -24,8 +43,11 @@ from repro.configs import get_config, get_reduced
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as MD
 from repro.serving import serve_lib
+from repro.serving.scheduler import PREFILL_BUCKETS, DecodeScheduler
 from repro.sharding import rules as R
 from repro.sharding.ctx import sharding_rules
+
+SSM_MIXERS = ("mamba", "mlstm", "slstm")
 
 
 def hash_tokens(text: str, vocab: int, max_len: int) -> np.ndarray:
@@ -43,91 +65,150 @@ class FleetMember:
     arch: str
     cfg: object
     params: object
-    prefill: object
-    decode: object
-    batch: int
+    prefill_row: object          # jitted (params, toks(1,L), lens, cache1)
+    decode_rows: object          # jitted (params, toks(B,1), cache) per-row
+    merge_row: object            # jitted slot admission into the cache pool
+    batch: int                   # decode slots
     max_seq: int
-    calls: int = 0
+    prompt_cap: int              # longest admissible prompt
+    exact_prefill: bool          # SSM state: no pad-bucketing allowed
+    calls: int = 0               # generate()/batch_call drains
     tokens_out: int = 0
-    prompts_in: int = 0        # real (non-padding) prompts across all calls
+    prompts_in: int = 0          # real (non-padding) prompts across all calls
+    warmup_ms: float = 0.0       # construction-time JIT compile wall clock
 
     @property
     def slots_per_call(self) -> float:
-        """Mean real prompts per generate() call — batch-slot utilisation."""
+        """Mean real prompts per generate()/batch_call drain.  With the
+        continuous-batching scheduler a drain admits any number of
+        prompts through the slot pool, so this measures batching depth
+        per upstream call (it can exceed the physical slot count);
+        ``DecodeScheduler.occupancy`` is the per-step slot utilisation."""
         return self.prompts_in / max(1, self.calls)
 
 
 class LocalFleet:
     def __init__(self, archs: List[str], *, reduced: bool = True,
                  batch: int = 4, max_seq: int = 160, gen_tokens: int = 16,
-                 moe_impl: str = "ep", seed: int = 0):
+                 moe_impl: str = "ep", seed: int = 0, warmup: bool = True):
         self.mesh = make_host_mesh()
         self.gen_tokens = gen_tokens
         self.members: Dict[str, FleetMember] = {}
+        self.schedulers: Dict[str, DecodeScheduler] = {}
+        self._lock = threading.RLock()
         key = jax.random.PRNGKey(seed)
         for arch in archs:
             cfg = get_reduced(arch) if reduced else get_config(arch)
             with sharding_rules(self.mesh, R.act_rules(self.mesh, batch)):
-                pre, dec, sh = serve_lib.build_serve_steps(
-                    cfg, self.mesh, batch, max_seq, moe_impl=moe_impl,
-                    donate=False)
+                pre_row, dec, merge = serve_lib.build_row_serve_steps(
+                    cfg, moe_impl=moe_impl)
+                sh = serve_lib.serve_shardings(cfg, self.mesh, batch, max_seq)
                 params = jax.jit(
                     lambda k, c=cfg: MD.init_params(c, k),
                     out_shardings=sh["param_sharding"])(key)
-            self.members[arch] = FleetMember(arch, cfg, params, pre, dec,
-                                             batch, max_seq)
+            exact = any(s.mixer in SSM_MIXERS
+                        for g in cfg.groups for s in g.period)
+            m = FleetMember(arch, cfg, params, pre_row, dec, merge,
+                            batch, max_seq,
+                            prompt_cap=max_seq - gen_tokens - 1,
+                            exact_prefill=exact)
+            self.members[arch] = m
+            self.schedulers[arch] = self._make_scheduler(m)
+            if warmup:
+                self._warmup(m)
 
-    def generate(self, arch: str, prompts: List[str]) -> List[dict]:
-        """Batched greedy generation: prefill all prompts (padded into the
-        fixed batch) then ``gen_tokens`` decode steps."""
-        m = self.members[arch]
-        m.calls += 1
-        cfg = m.cfg
-        prompt_len = m.max_seq - self.gen_tokens - 1
-        rows = [hash_tokens(p, cfg.vocab_size, prompt_len)
-                for p in prompts[: m.batch]]
-        m.prompts_in += len(rows)
-        L = max(len(r) for r in rows)
-        toks = np.zeros((m.batch, L), np.int32)
-        for i, r in enumerate(rows):
-            toks[i, :len(r)] = r     # pad-right with 0s (uniform pos; demo)
-        cross = None
-        if cfg.cross_ctx_len:
-            cross = jnp.zeros((m.batch, cfg.cross_ctx_len, cfg.d_model),
-                              jnp.dtype(cfg.dtype))
+    def _make_scheduler(self, m: FleetMember) -> DecodeScheduler:
+        make_cross = None
+        if m.cfg.cross_ctx_len:
+            make_cross = lambda b, cfg=m.cfg: jnp.zeros(
+                (b, cfg.cross_ctx_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        return DecodeScheduler(
+            m, gen_tokens=self.gen_tokens,
+            init_cache_fn=lambda b, cfg=m.cfg: MD.init_cache(
+                cfg, b, m.max_seq),
+            make_cross_fn=make_cross)
+
+    def _warmup(self, m: FleetMember):
+        """Compile every production step at construction: one throwaway
+        request per prompt-length bucket runs the real admit+decode path,
+        so serving-time ``ttft_ms`` never includes XLA compile time and
+        latency-aware selection is not biased against the first model
+        used.  (Exact-length archs compile per prompt length by design;
+        their decode/merge — the steady-state cost — still pre-compiles.)"""
+        sched = self.schedulers[m.arch]
+        widths = [4] if m.exact_prefill else [
+            b for b in PREFILL_BUCKETS if b <= m.prompt_cap] + [m.prompt_cap]
         t0 = time.perf_counter()
         with sharding_rules(self.mesh, R.act_rules(self.mesh, m.batch)):
-            cache = MD.init_cache(cfg, m.batch, m.max_seq)
-            args = [m.params, jnp.asarray(toks), cache]
-            if cross is not None:
-                args.append(cross)
-            nxt, cache = m.prefill(*args)
-            ttft = (time.perf_counter() - t0) * 1e3
-            out_ids = [nxt]
-            for _ in range(self.gen_tokens - 1):
-                nxt, cache = m.decode(m.params, nxt[:, None], cache)
-                out_ids.append(nxt)
-        total = (time.perf_counter() - t0) * 1e3
-        ids = np.stack([np.asarray(t) for t in out_ids], 1)  # (B, T)
-        m.tokens_out += int(ids.size)
-        results = []
-        for i, p in enumerate(prompts[: m.batch]):
-            results.append({
-                "content": (f"[{arch}] {ids.shape[1]} tokens: "
-                            + " ".join(str(x) for x in ids[i][:10])),
-                "tokens": ids[i].tolist(),
-                "ttft_ms": ttft,
-                "tpot_ms": (total - ttft) / max(1, ids.shape[1] - 1),
-            })
-        return results
+            for w in dict.fromkeys(widths):
+                sched.submit(np.full((w,), 4, np.int32), max_new=2)
+            sched.drain()
+        m.warmup_ms = (time.perf_counter() - t0) * 1e3
+        # warmup traffic must not pollute serving stats
+        m.tokens_out = m.prompts_in = 0
+        sched.admitted = sched.decode_steps = sched.slot_steps = 0
+        sched._finished.clear()
+
+    # -- generation ---------------------------------------------------------
+
+    def generate(self, arch: str, prompts: List[str],
+                 max_new: Optional[int] = None) -> List[dict]:
+        """Greedy generation via the continuous-batching scheduler.  Any
+        number of prompts is accepted: overflow beyond the slot count is
+        queued and admitted as slots free (never silently dropped)."""
+        with self._lock:
+            m = self.members[arch]
+            m.calls += 1
+            rids = self._submit(arch, prompts, max_new)
+            seqs = self._drain({arch: rids})
+            return [self._result(m, seqs[r]) for r in rids]
+
+    def _submit(self, arch: str, prompts: List[str],
+                max_new: Optional[int] = None) -> List[int]:
+        m = self.members[arch]
+        sched = self.schedulers[arch]
+        return [sched.submit(hash_tokens(p, m.cfg.vocab_size, m.prompt_cap),
+                             max_new=max_new)
+                for p in prompts]
+
+    def _drain(self, rids_by_arch: Dict[str, List[int]]) -> Dict[int, object]:
+        """Round-robin step every involved scheduler until all request ids
+        have finished — cross-arch decode interleaving under one drain."""
+        seqs: Dict[int, object] = {}
+        want = {arch: set(rids) for arch, rids in rids_by_arch.items()}
+        while any(want.values()):
+            for arch, outstanding in want.items():
+                if not outstanding:
+                    continue
+                sched = self.schedulers[arch]
+                with sharding_rules(
+                        self.mesh,
+                        R.act_rules(self.mesh, self.members[arch].batch)):
+                    for seq in sched.step():
+                        if seq.rid in outstanding:
+                            outstanding.remove(seq.rid)
+                            seqs[seq.rid] = seq
+        return seqs
+
+    def _result(self, m: FleetMember, seq) -> dict:
+        service_ms = (seq.t_done - seq.t_submit) * 1e3
+        return {
+            "content": (f"[{m.arch}] {len(seq.out)} tokens: "
+                        + " ".join(str(x) for x in seq.out[:10])),
+            "tokens": list(seq.out),
+            "ttft_ms": seq.ttft_ms,
+            "tpot_ms": seq.tpot_ms,
+            "service_ms": service_ms,
+        }
 
     # -- router transport -----------------------------------------------------
     def call_fn(self, model_to_arch: Dict[str, str]):
-        """Router transport with micro-batching: the returned callable
-        serves single requests; its ``batch_call`` attribute takes a list
-        of same-endpoint payloads, groups them by backend arch, and fills
-        the fixed batch slots of each ``generate()`` call with real
-        prompts (chunking when a group exceeds the slot count)."""
+        """Router transport over the continuous-batching scheduler: the
+        returned callable serves single requests; its ``batch_call``
+        attribute submits every payload to its backend's scheduler up
+        front and drains them together, so same-arch requests share
+        decode steps and there is no fixed-chunk micro-batching layer —
+        the slot pool itself is the batching boundary."""
 
         def _resolve(payload):
             model = payload.get("model") or payload.get("modelId", "")
@@ -144,7 +225,12 @@ class LocalFleet:
                                  "finish_reason": "stop"}],
                     "model": model,
                     "usage": {"prompt_tokens": len(prompt) // 4,
-                              "completion_tokens": len(out["tokens"])}}
+                              "completion_tokens": len(out["tokens"]),
+                              # per-request transport service time: the
+                              # pipeline attributes THIS to latency-aware
+                              # selection instead of batch wall clock
+                              "vsr_service_ms": round(out["service_ms"], 3),
+                              "vsr_ttft_ms": round(out["ttft_ms"], 3)}}
 
         def call(ep, payload, headers):
             model, arch, prompt = _resolve(payload)
@@ -153,20 +239,19 @@ class LocalFleet:
 
         def batch_call(ep, payloads, headers_list):
             resolved = [_resolve(p) for p in payloads]
-            by_arch: Dict[str, List[int]] = {}
-            for i, (_, arch, _) in enumerate(resolved):
-                by_arch.setdefault(arch, []).append(i)
-            results: List[Optional[dict]] = [None] * len(payloads)
-            for arch, idxs in by_arch.items():
-                slots = self.members[arch].batch
-                for s in range(0, len(idxs), slots):      # micro-batches
-                    chunk = idxs[s: s + slots]
-                    prompts = [resolved[i][2] for i in chunk]
-                    outs = self.generate(arch, prompts)
-                    for i, out in zip(chunk, outs):
-                        model, _, prompt = resolved[i]
-                        results[i] = _wrap(model, prompt, out)
-            return results
+            with self._lock:
+                rids_by_arch: Dict[str, List[int]] = {}
+                rid_of: List[int] = []
+                for model, arch, prompt in resolved:
+                    rid = self._submit(arch, [prompt])[0]
+                    rids_by_arch.setdefault(arch, []).append(rid)
+                    rid_of.append(rid)
+                for arch in rids_by_arch:
+                    self.members[arch].calls += 1
+                seqs = self._drain(rids_by_arch)
+            return [_wrap(model, prompt,
+                          self._result(self.members[arch], seqs[rid]))
+                    for (model, arch, prompt), rid in zip(resolved, rid_of)]
 
         call.batch_call = batch_call
         return call

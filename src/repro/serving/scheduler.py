@@ -1,0 +1,222 @@
+"""Continuous-batching decode scheduler (slot-based, vLLM-style).
+
+Each fleet member owns one :class:`DecodeScheduler` holding a persistent
+decode state over a fixed pool of batch slots:
+
+* a shared KV/SSM cache of shape ``(slots, max_seq, ...)`` (the KV pool),
+* per-slot prompt length, absolute position, and done mask,
+* a FIFO of submitted-but-not-admitted requests.
+
+``submit()`` enqueues a request; ``step()`` first *admits* queued requests
+into free slots — a single-row, length-exact (or length-bucketed) prefill
+merged into the in-flight cache — then runs ONE batched decode step over
+all slots with per-row positions.  Newly arrived prompts therefore join
+the decode batch at the next step boundary instead of waiting for a full
+``generate()`` prefill+decode cycle, which is what drives time-to-first-
+token down under staggered arrivals.
+
+Correctness notes:
+
+* Rows decode from their OWN last real token: per-slot ``pos`` feeds the
+  per-row position vector in ``cache["pos"]``, so KV writes, rope phases
+  and attention masks are per-row (`model.decode_step`).
+* Admission prefill is right-padded to a length bucket but samples at the
+  row's last real position (``lens``-aware prefill); pad garbage beyond
+  the prompt is overwritten by decode steps before it ever enters a mask.
+  Architectures with recurrent (SSM) state use EXACT lengths instead —
+  a padded suffix would corrupt the carried state.
+* A freed slot keeps decoding garbage until re-admission (the batch shape
+  is fixed); its outputs are discarded and its cache row is fully
+  overwritten by the next merge.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.observability import METRICS
+
+# prompt-length buckets for admission prefill: few enough that warmup can
+# pre-compile all of them, coarse enough to amortize XLA program count.
+PREFILL_BUCKETS = (16, 64)
+
+
+def bucket_len(n: int, cap: int, *, exact: bool) -> int:
+    """Padded prefill width for a prompt of ``n`` tokens (<= cap)."""
+    n = min(n, cap)
+    if exact:
+        return n
+    for b in PREFILL_BUCKETS:
+        if n <= b <= cap:
+            return b
+    return cap
+
+
+@dataclass
+class SequenceState:
+    """One in-flight (or queued / finished) request."""
+    rid: int
+    ids: np.ndarray                 # prompt token ids (exact, unpadded)
+    max_new: int                    # tokens still to generate at submit
+    t_submit: float
+    slot: int = -1                  # -1 while queued
+    t_first: float = 0.0            # first-token wall clock
+    t_done: float = 0.0
+    out: List[int] = field(default_factory=list)
+
+    @property
+    def ttft_ms(self) -> float:
+        return (self.t_first - self.t_submit) * 1e3
+
+    @property
+    def tpot_ms(self) -> float:
+        n = len(self.out)
+        if n <= 1:
+            return 0.0
+        return (self.t_done - self.t_first) * 1e3 / (n - 1)
+
+
+class DecodeScheduler:
+    """Slot-based continuous-batching scheduler for one fleet member.
+
+    ``member`` supplies the model state and jitted steps; the scheduler
+    owns the persistent decode cache, the slot bookkeeping, and the
+    admission queue.  Not thread-safe by itself — :class:`LocalFleet`
+    serializes access (the async front-end drives it from one thread).
+    """
+
+    def __init__(self, member, *, gen_tokens: int, init_cache_fn,
+                 make_cross_fn=None):
+        self.m = member
+        self.gen_tokens = gen_tokens
+        self.slots = member.batch
+        self.max_seq = member.max_seq
+        self._init_cache = init_cache_fn
+        self._make_cross = make_cross_fn
+        self.cache = init_cache_fn(self.slots)
+        self.cache["pos"] = jnp.zeros((self.slots,), jnp.int32)
+        self._row_cache0 = init_cache_fn(1)     # reusable zero batch-1 cache
+        self.pos = np.zeros((self.slots,), np.int64)
+        self.last_tok = np.zeros((self.slots,), np.int32)
+        self.active: List[Optional[SequenceState]] = [None] * self.slots
+        self.queue: Deque[SequenceState] = deque()
+        self._rid = 0
+        # bounded results side-table for result()-style consumers; the
+        # primary delivery path is step()'s return value, so this must
+        # not grow with total requests served
+        self._finished: "OrderedDict[int, SequenceState]" = OrderedDict()
+        self._finished_cap = max(64, 4 * self.slots)
+        # stats
+        self.admitted = 0
+        self.decode_steps = 0
+        self.slot_steps = 0              # active slots summed over steps
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, ids: np.ndarray, *, max_new: Optional[int] = None
+               ) -> int:
+        """Queue one tokenized prompt; returns a request id whose result
+        is delivered by a later ``step()``."""
+        self._rid += 1
+        seq = SequenceState(rid=self._rid, ids=np.asarray(ids, np.int32),
+                            max_new=max_new or self.gen_tokens,
+                            t_submit=time.perf_counter())
+        self.queue.append(seq)
+        return self._rid
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + sum(s is not None for s in self.active)
+
+    def step(self) -> List[SequenceState]:
+        """Admit queued requests into free slots, then run one decode step
+        over the in-flight batch.  Returns sequences finished this step."""
+        done: List[SequenceState] = []
+        self._admit(done)
+        live = [i for i, s in enumerate(self.active) if s is not None]
+        if live:
+            self._decode(live, done)
+        for seq in done:
+            self._finished[seq.rid] = seq
+            while len(self._finished) > self._finished_cap:
+                self._finished.popitem(last=False)
+            METRICS.observe("fleet_ttft_ms", seq.ttft_ms, arch=self.m.arch)
+        return done
+
+    def drain(self) -> List[SequenceState]:
+        """Step until every submitted request has finished."""
+        out: List[SequenceState] = []
+        while self.pending:
+            out.extend(self.step())
+        return out
+
+    def result(self, rid: int) -> Optional[SequenceState]:
+        return self._finished.pop(rid, None)
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self, done: List[SequenceState]):
+        m = self.m
+        while self.queue and None in self.active:
+            slot = self.active.index(None)
+            seq = self.queue.popleft()
+            n = len(seq.ids)
+            width = bucket_len(n, m.prompt_cap, exact=m.exact_prefill)
+            toks = np.zeros((1, width), np.int32)
+            toks[0, :min(n, width)] = seq.ids[:width]
+            lens = np.asarray([min(n, width)], np.int32)
+            args = [m.params, jnp.asarray(toks), jnp.asarray(lens),
+                    self._row_cache0]
+            if self._make_cross is not None:
+                args.append(self._make_cross(1))
+            nxt, row_cache = m.prefill_row(*args)
+            self.cache = m.merge_row(self.cache, row_cache, slot)
+            first = int(np.asarray(nxt)[0])
+            seq.slot = slot
+            seq.t_first = time.perf_counter()
+            seq.out.append(first)
+            self.pos[slot] = lens[0]
+            self.last_tok[slot] = first
+            self.active[slot] = seq
+            self.admitted += 1
+            m.prompts_in += 1
+            m.tokens_out += 1
+            if len(seq.out) >= seq.max_new:
+                self._finish(seq, done)
+
+    def _decode(self, live: List[int], done: List[SequenceState]):
+        m = self.m
+        self.cache["pos"] = jnp.asarray(self.pos, jnp.int32)
+        toks = jnp.asarray(self.last_tok[:, None])
+        nxt, self.cache = m.decode_rows(m.params, toks, self.cache)
+        nxt = np.asarray(nxt)
+        self.decode_steps += 1
+        self.slot_steps += len(live)
+        self.pos[live] += 1
+        for i in live:
+            seq = self.active[i]
+            tok = int(nxt[i])
+            seq.out.append(tok)
+            self.last_tok[i] = tok
+            m.tokens_out += 1
+            if len(seq.out) >= seq.max_new or self.pos[i] >= self.max_seq - 1:
+                self._finish(seq, done)
+
+    def _finish(self, seq: SequenceState, done: List[SequenceState]):
+        seq.t_done = time.perf_counter()
+        if seq.t_first == 0.0:
+            seq.t_first = seq.t_done
+        self.active[seq.slot] = None
+        self.pos[seq.slot] = 0
+        done.append(seq)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean active slots per decode step (batch utilisation)."""
+        return self.slot_steps / max(1, self.decode_steps)

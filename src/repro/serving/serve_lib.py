@@ -31,6 +31,17 @@ def make_prefill_fn(cfg: ModelConfig, *, moe_impl: str = "ep"):
     return prefill_step
 
 
+def make_prefill_row_fn(cfg: ModelConfig, *, moe_impl: str = "ep"):
+    """Length-aware prefill: ``lens`` (B,) marks each row's real prompt
+    length; the sampled token comes from each row's last real position,
+    not the right-pad tail."""
+    def prefill_row(params, tokens, lens, cache, cross_ctx=None):
+        logits, cache = MD.prefill(cfg, params, tokens, cache, cross_ctx,
+                                   moe_impl=moe_impl, lens=lens)
+        return greedy(logits), cache
+    return prefill_row
+
+
 def make_decode_fn(cfg: ModelConfig, *, moe_impl: str = "ep"):
     def serve_step(params, tokens, cache):
         logits, cache = MD.decode_step(cfg, params, tokens, cache,
@@ -77,3 +88,39 @@ def build_serve_steps(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int,
         out_shardings=(None, sh["cache_sharding"]),
         donate_argnums=(2,) if donate else ())
     return prefill, decode, sh
+
+
+def build_row_serve_steps(cfg: ModelConfig, *, moe_impl: str = "ep"):
+    """Continuous-batching serving steps (slot-based decode state).
+
+    Returns ``(prefill_row, decode, merge_row)``:
+
+    * ``prefill_row(params, tokens (1, L), lens (1,), cache1, [cross])`` —
+      single-row prefill into a fresh batch-1 cache; the sampled token is
+      taken at the row's last REAL position (``lens``-aware), so bucketed
+      right-padding never conditions on pad tokens.
+    * ``decode(params, tokens (B, 1), cache)`` — one step over ALL slots;
+      ``cache["pos"]`` is a (B,) per-row position vector, so each slot
+      writes/attends at its own depth.
+    * ``merge_row(cache, row_cache, slot)`` — insert a prefilled batch-1
+      cache into batch slot ``slot`` of the shared decode cache (KV pool
+      admission).  ``pos`` is scheduler-owned and excluded from the merge.
+
+    Shapes are stable: ``decode`` and ``merge_row`` compile exactly once
+    per member; ``prefill_row`` compiles once per prompt-length bucket.
+    """
+    prefill_row = jax.jit(make_prefill_row_fn(cfg, moe_impl=moe_impl))
+    decode = jax.jit(make_decode_fn(cfg, moe_impl=moe_impl),
+                     donate_argnums=(2,))
+
+    def _merge(cache, row_cache, slot):
+        def one(b, r):
+            return jax.lax.dynamic_update_slice(
+                b, r.astype(b.dtype), (0, slot) + (0,) * (b.ndim - 2))
+        strip = lambda c: {k: v for k, v in c.items() if k != "pos"}
+        out = jax.tree.map(one, strip(cache), strip(row_cache))
+        out["pos"] = cache["pos"]
+        return out
+
+    merge_row = jax.jit(_merge, donate_argnums=(0,))
+    return prefill_row, decode, merge_row
