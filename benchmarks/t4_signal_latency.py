@@ -1,11 +1,18 @@
-"""Table 4: signal extraction latency by type (median / p99)."""
+"""Table 4: signal extraction latency by type (median / p99), plus the
+beyond-paper encoder mode: per-request signal latency vs batch size when
+every learned signal of a batch is served by ONE fused multi-task
+encoder pass (SignalPlan -> EncoderBackend.classify_all).
 
+  PYTHONPATH=src python -m benchmarks.t4_signal_latency [--smoke]
+"""
+
+import argparse
 import time
 
 import numpy as np
 
 from repro.classifiers.backend import HashBackend
-from repro.core.signals import SignalEngine
+from repro.core.signals import SignalEngine, SignalPlan
 from repro.core.types import Message, Request
 
 CFG = {
@@ -58,4 +65,77 @@ def run(trials: int = 40):
         ml = type_ not in ("keyword", "context", "language", "authz")
         rows.append((f"t4_signal_{type_}", med,
                      f"p99={p99:.0f}us ml={'yes' if ml else 'no'}"))
+    eng.close()
     return rows
+
+
+# ---------------------------------------------------------------------------
+# encoder mode: fused batch-level extraction
+# ---------------------------------------------------------------------------
+
+# classifier-consuming learned signals only (embedding-based ones are the
+# EmbeddingPlan's job, measured by t_batch_throughput)
+ENC_CFG = {
+    "domain": {"d": {"mmlu_categories": ["math"]}},
+    "fact_check": {"f": {"threshold": 0.5}},
+    "modality": {"m": {"modalities": ["diffusion"]}},
+    "user_feedback": {"u": {"categories": ["dissatisfied"]}},
+    "jailbreak": {"j": {"method": "classifier", "threshold": 0.5}},
+    "pii": {"p": {"pii_types_allowed": []}},
+}
+
+LEARNED_TASKS = {"domain", "fact_check", "modality", "user_feedback",
+                 "jailbreak"}
+
+
+def _encoder_engine():
+    from repro.classifiers.encoder import EncoderBackend
+    be = EncoderBackend.small(trained=LEARNED_TASKS | {"pii"})
+    # hash embeddings + encoder classifier heads: the production split
+    return SignalEngine(ENC_CFG, HashBackend(), classifier=be)
+
+
+def run_encoder(batch_sizes=(1, 4, 16), trials: int = 4):
+    """Per-request signal latency vs batch size on the EncoderBackend.
+    One fused classify_all (+ one token_classify) serves the whole batch,
+    so per-request latency falls as the forward amortizes (sub-linear
+    total scaling)."""
+    eng = _encoder_engine()
+    rows = []
+    for bs in batch_sizes:
+        reqs = [Request(messages=[Message(
+                    "user", f"{TEXTS[i % len(TEXTS)]} (variant {i})")])
+                for i in range(bs)]
+        lat, calls = [], 0
+        for trial in range(trials + 1):
+            plan = SignalPlan(eng.classifier)
+            t0 = time.perf_counter()
+            eng.extract_many(reqs, plan=plan)
+            dt = time.perf_counter() - t0
+            if trial:                       # trial 0 warms the jit cache
+                lat.append(dt / bs * 1e6)
+            calls = plan.classify_calls
+        med = float(np.percentile(np.asarray(lat), 50))
+        rows.append((f"t4_encoder_batch{bs}", med,
+                     f"classify_all_calls={calls} "
+                     f"total_ms={med * bs / 1e3:.2f}"))
+    eng.close()
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: tiny batches, few trials")
+    ap.add_argument("--trials", type=int, default=0)
+    args = ap.parse_args(argv)
+    sizes = (1, 4, 8) if args.smoke else (1, 4, 16)
+    trials = args.trials or (2 if args.smoke else 4)
+    print("name,us_per_call,derived")
+    for name, us, derived in (run(trials=8 if args.smoke else 40) +
+                              run_encoder(sizes, trials)):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -131,6 +131,15 @@ class ClassifierBackend:
                  ) -> Tuple[List[str], np.ndarray]:
         raise NotImplementedError
 
+    def classify_all(self, tasks: Sequence[str], texts: Sequence[str]
+                     ) -> Dict[str, Tuple[List[str], np.ndarray]]:
+        """Multi-task batch: ``{task: (labels, probs)}`` for every task
+        over every text.  Base implementation loops ``classify`` per task
+        (reference semantics — HashBackend works unchanged); backends
+        with fused multi-task inference (EncoderBackend) override it with
+        one batched forward."""
+        return {t: self.classify(t, texts) for t in tasks}
+
     def token_classify(self, texts: Sequence[str]):
         raise NotImplementedError
 
@@ -253,3 +262,9 @@ def get_backend(name: str = "hash") -> ClassifierBackend:
         else:
             raise KeyError(name)
     return _BACKENDS[name]
+
+
+def register_backend(name: str, backend: ClassifierBackend):
+    """Install a configured backend instance (e.g. an EncoderBackend with
+    trained adapters) so configs can reference it by name."""
+    _BACKENDS[name] = backend

@@ -297,6 +297,12 @@ class EncoderBackend(ClassifierBackend):
         self.batched = batched
         self._fallback = HashBackend()
         self._fwd = jax.jit(functools.partial(encoder_forward, cfg))
+        # jitted classification paths: task identity is static so each
+        # (task-set, batch-shape) compiles once and replays from cache
+        self._single = jax.jit(functools.partial(single_task_logits, cfg),
+                               static_argnames=("task",))
+        self._multi = jax.jit(functools.partial(multitask_logits, cfg),
+                              static_argnames=("tasks",))
 
     @classmethod
     def default(cls, cfg: Optional[EncoderConfig] = None, seed: int = 0):
@@ -304,6 +310,16 @@ class EncoderBackend(ClassifierBackend):
         key = jax.random.PRNGKey(seed)
         k1, k2 = jax.random.split(key)
         return cls(cfg, init_encoder(cfg, k1), init_adapters(cfg, k2))
+
+    @classmethod
+    def small(cls, trained=(), seed: int = 0):
+        """Tiny CPU-sized instance shared by tests and benchmark smoke
+        runs."""
+        cfg = EncoderConfig(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                            max_len=64, lora_rank=8, embed_dim=64)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        return cls(cfg, init_encoder(cfg, k1), init_adapters(cfg, k2),
+                   trained=set(trained))
 
     # -- embeddings ---------------------------------------------------------
     def embed(self, texts, dim: Optional[int] = None,
@@ -315,26 +331,42 @@ class EncoderBackend(ClassifierBackend):
         return np.asarray(emb, np.float32)
 
     # -- sequence classification ------------------------------------------------
+    def _probs_to_result(self, task, logits):
+        probs = np.asarray(jax.nn.softmax(logits), np.float32)
+        return [TASK_LABELS[task][int(i)] for i in probs.argmax(1)], probs
+
     def classify(self, task, texts):
         if task not in self.trained:
             return self._fallback.classify(task, texts)
         ids, lens = TOK.encode_batch(list(texts), self.cfg.max_len)
-        logits = single_task_logits(self.cfg, self.params, self.adapters,
-                                    task, jnp.asarray(ids), jnp.asarray(lens))
-        probs = np.asarray(jax.nn.softmax(logits), np.float32)
-        labels = [TASK_LABELS[task][int(i)] for i in probs.argmax(1)]
-        return labels, probs
+        logits = self._single(self.params, self.adapters, task=task,
+                              ids=jnp.asarray(ids), lens=jnp.asarray(lens))
+        return self._probs_to_result(task, logits)
 
     def classify_all(self, tasks, texts):
-        """Batched multi-task path (beyond-paper fusion)."""
-        ids, lens = TOK.encode_batch(list(texts), self.cfg.max_len)
-        logits = multitask_logits(self.cfg, self.params, self.adapters,
-                                  tasks, jnp.asarray(ids), jnp.asarray(lens))
+        """Fused multi-task path (beyond-paper): ONE batched forward of
+        B*T rows serves every trained task, folding tasks into the batch
+        dimension via per-row LoRA.  Untrained tasks delegate per-task to
+        the hash fallback so results match ``classify`` exactly.  With
+        ``batched=False`` (the paper's §9.3 baseline) trained tasks run
+        one forward each instead."""
         out = {}
+        fused = tuple(t for t in tasks if t in self.trained)
         for t in tasks:
-            probs = np.asarray(jax.nn.softmax(logits[t]), np.float32)
-            out[t] = ([TASK_LABELS[t][int(i)] for i in probs.argmax(1)],
-                      probs)
+            if t not in self.trained:
+                out[t] = self._fallback.classify(t, texts)
+        if not fused:
+            return out
+        ids, lens = TOK.encode_batch(list(texts), self.cfg.max_len)
+        ids, lens = jnp.asarray(ids), jnp.asarray(lens)
+        if self.batched:
+            logits = self._multi(self.params, self.adapters, tasks=fused,
+                                 ids=ids, lens=lens)
+        else:
+            logits = {t: self._single(self.params, self.adapters, task=t,
+                                      ids=ids, lens=lens) for t in fused}
+        for t in fused:
+            out[t] = self._probs_to_result(t, logits[t])
         return out
 
     # -- token classification (PII) ------------------------------------------------
@@ -342,8 +374,8 @@ class EncoderBackend(ClassifierBackend):
         if "pii" not in self.trained:
             return self._fallback.token_classify(texts)
         ids, lens = TOK.encode_batch(list(texts), self.cfg.max_len)
-        logits = single_task_logits(self.cfg, self.params, self.adapters,
-                                    "pii", jnp.asarray(ids), jnp.asarray(lens))
+        logits = self._single(self.params, self.adapters, task="pii",
+                              ids=jnp.asarray(ids), lens=jnp.asarray(lens))
         probs = np.asarray(jax.nn.softmax(logits), np.float32)
         out = []
         for i, t in enumerate(texts):
@@ -357,17 +389,25 @@ class EncoderBackend(ClassifierBackend):
             out.append(spans)
         return out
 
-    # -- NLI cross-encoder ---------------------------------------------------------
-    def nli(self, claims, evidences):
-        rows = [TOK.encode_pair(c, e, self.cfg.max_len)
-                for c, e in zip(claims, evidences)]
+    # -- pair cross-encoders (NLI, grounding detector) ------------------------------
+    def _pair_classify(self, task, texts_a, texts_b):
+        rows = [TOK.encode_pair(a, b, self.cfg.max_len)
+                for a, b in zip(texts_a, texts_b)]
         ids = jnp.asarray(np.stack([r[0] for r in rows]))
         seg = jnp.asarray(np.stack([r[1] for r in rows]))
         lens = jnp.asarray(np.asarray([r[2] for r in rows], np.int32))
-        lora = {k: self.adapters["nli"][k]
+        lora = {k: self.adapters[task][k]
                 for k in ("a_q", "b_q", "a_v", "b_v")}
         hidden = encoder_forward(self.cfg, self.params, ids, lens, seg=seg,
                                  lora=lora)
-        logits = cls_pool(hidden) @ self.adapters["nli"]["head"]
+        logits = cls_pool(hidden) @ self.adapters[task]["head"]
         probs = np.asarray(jax.nn.softmax(logits), np.float32)
-        return [TASK_LABELS["nli"][int(i)] for i in probs.argmax(1)], probs
+        return [TASK_LABELS[task][int(i)] for i in probs.argmax(1)], probs
+
+    def nli(self, claims, evidences):
+        return self._pair_classify("nli", claims, evidences)
+
+    def detector(self, sentences, contexts):
+        """Grounding check as a pair cross-encoder: (answer sentence,
+        grounding context) -> SUPPORTED / HALLUCINATED."""
+        return self._pair_classify("detector", sentences, contexts)

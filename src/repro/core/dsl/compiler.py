@@ -79,6 +79,7 @@ def compile_program(prog: Program) -> RouterConfig:
         cfg.default_model = str(g.get("default_model", ""))
         cfg.strategy = str(g.get("strategy", "priority"))
         cfg.embedding_backend = str(g.get("embedding_backend", "hash"))
+        cfg.classifier_backend = str(g.get("classifier_backend", ""))
         for mname, prof in g.get("model_profiles", {}).items():
             if isinstance(prof, dict):
                 cfg.model_profiles[mname] = ModelProfile(

@@ -122,6 +122,8 @@ def decompile(cfg: RouterConfig) -> str:
     g["strategy"] = cfg.strategy
     if cfg.embedding_backend != "hash":
         g["embedding_backend"] = cfg.embedding_backend
+    if cfg.classifier_backend:
+        g["classifier_backend"] = cfg.classifier_backend
     if cfg.model_profiles:
         g["model_profiles"] = {
             m: {"cost_per_mtok": p.cost_per_mtok, "quality": p.quality,

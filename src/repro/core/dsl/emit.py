@@ -97,7 +97,8 @@ def config_to_dict(cfg: RouterConfig) -> dict:
                            for k, v in cfg.model_profiles.items()},
         "global": {"default_model": cfg.default_model,
                    "strategy": cfg.strategy,
-                   "embedding_backend": cfg.embedding_backend},
+                   "embedding_backend": cfg.embedding_backend,
+                   "classifier_backend": cfg.classifier_backend},
     }
 
 

@@ -52,11 +52,23 @@ class HaluGate:
     C_SENT, C_DET, C_NLI = 1.0, 4.0, 2.5
 
     def __init__(self, backend: ClassifierBackend,
-                 detector_threshold: float = 0.5):
+                 detector_threshold: float = 0.5,
+                 embed_backend: Optional[ClassifierBackend] = None):
+        """``backend`` powers the classifier stages (sentinel / detector /
+        NLI); ``embed_backend`` the heuristic detector's semantic-support
+        embeddings (defaults to ``backend``).  When ``backend`` carries
+        trained ``detector``/``nli`` encoder heads, stages 2-3 upgrade to
+        them automatically."""
         self.backend = backend
+        self.embed_backend = embed_backend or backend
         self.detector_threshold = detector_threshold
         self.stats = {"queries": 0, "gated_in": 0, "spans": 0,
                       "cost_units": 0.0}
+
+    def _head(self, task: str) -> bool:
+        """True when the backend serves ``task`` from a trained encoder
+        head (rather than the lexical fallback)."""
+        return task in (getattr(self.backend, "trained", None) or set())
 
     # -- Stage 1 ------------------------------------------------------------
     def sentinel(self, query: str) -> Tuple[bool, float]:
@@ -64,25 +76,43 @@ class HaluGate:
         return labels[0] == "NEEDS_FACT_CHECK", float(probs[0][1])
 
     # -- Stage 2: span support vs grounding context ---------------------------
-    def detect(self, query: str, context: str, answer: str
-               ) -> List[SpanResult]:
-        """Sentence-level grounding check: a sentence is flagged when its
-        lexical+semantic support in the context falls below threshold.
-        (The EncoderBackend upgrades this to token-level BIO tagging.)"""
-        spans: List[SpanResult] = []
-        ctx_grams = TS.char_ngrams(context, 3)
-        ctx_emb = self.backend.embed([context])[0] if context else None
-        pos = 0
+    def _sentences(self, answer: str) -> List[Tuple[int, int, str]]:
+        out, pos = [], 0
         for sent in _SENT_SPLIT.split(answer):
             if not sent.strip():
                 continue
             start = answer.find(sent, pos)
             end = start + len(sent)
             pos = end
+            out.append((start, end, sent))
+        return out
+
+    def detect(self, query: str, context: str, answer: str
+               ) -> List[SpanResult]:
+        """Sentence-level grounding check: a sentence is flagged when its
+        lexical+semantic support in the context falls below threshold.
+        A trained encoder ``detector`` head upgrades this to one batched
+        classification over all answer sentences."""
+        sents = self._sentences(answer)
+        if not sents:
+            return []
+        if self._head("detector") and hasattr(self.backend, "detector"):
+            # one batched (sentence, context) cross-encoder pass — the
+            # verdict must depend on the grounding context, not the
+            # sentence alone
+            _labels, probs = self.backend.detector(
+                [s for _, _, s in sents], [context] * len(sents))
+            return [SpanResult(start, end, s, float(p[1]))
+                    for (start, end, s), p in zip(sents, probs)
+                    if float(p[1]) >= self.detector_threshold]
+        spans: List[SpanResult] = []
+        ctx_grams = TS.char_ngrams(context, 3)
+        ctx_emb = self.embed_backend.embed([context])[0] if context else None
+        for start, end, sent in sents:
             lex = TS.jaccard(TS.char_ngrams(sent, 3), ctx_grams)
             sem = 0.0
             if ctx_emb is not None:
-                sem = float(self.backend.embed([sent])[0] @ ctx_emb)
+                sem = float(self.embed_backend.embed([sent])[0] @ ctx_emb)
             support = 0.5 * lex + 0.5 * max(0.0, sem)
             hedged = any(h in sent.lower() for h in _HEDGE)
             conf = 1.0 - support + (0.1 if hedged else 0.0)
@@ -93,7 +123,11 @@ class HaluGate:
     # -- Stage 3: NLI explanation ----------------------------------------------
     def explain(self, span: str, context: str) -> str:
         """ENTAILMENT / CONTRADICTION / NEUTRAL via cross-similarity +
-        negation cues (EncoderBackend: cross-encoder NLI head)."""
+        negation cues; a trained encoder ``nli`` head upgrades this to
+        the cross-encoder pair classifier."""
+        if self._head("nli") and hasattr(self.backend, "nli"):
+            labels, _probs = self.backend.nli([span], [context])
+            return labels[0]
         sim = TS.jaccard(TS.char_ngrams(span, 3), TS.char_ngrams(context, 3))
         negs = ("not", "never", "no ", "none", "isn't", "wasn't")
         sn = sum(1 for n in negs if n in span.lower())
@@ -115,9 +149,17 @@ class HaluGate:
         self.stats["gated_in"] += 1
         cost += self.C_DET
         spans = self.detect(query, context, answer)
-        for s in spans:
-            s.nli = self.explain(s.text, context)
-            cost += self.C_NLI
+        if spans and self._head("nli") and hasattr(self.backend, "nli"):
+            # one batched cross-encoder pass explains every flagged span
+            labels, _probs = self.backend.nli(
+                [s.text for s in spans], [context] * len(spans))
+            for s, lab in zip(spans, labels):
+                s.nli = lab
+                cost += self.C_NLI
+        else:
+            for s in spans:
+                s.nli = self.explain(s.text, context)
+                cost += self.C_NLI
         self.stats["spans"] += len(spans)
         self.stats["cost_units"] += cost
         return HaluGateResult(True, bool(spans), spans, {"units": cost})

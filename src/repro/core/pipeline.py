@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.observability import METRICS, Span, stage_scope
 from repro.core.plugins.base import PluginChain
+from repro.core.signals.plan import SignalPlan
 from repro.core.types import (Request, Response, RoutingOutcome,
                               SignalResult)
 
@@ -114,6 +115,7 @@ class RequestContext:
     plan: EmbeddingPlan
     root: Span
     t0: float
+    sig_plan: Optional[SignalPlan] = None   # shared fused-classifier plan
     sig: Optional[SignalResult] = None
     decision: Any = None                    # DecisionEngine EvalResult
     outcome: Optional[RoutingOutcome] = None
@@ -140,7 +142,10 @@ def stage_translate(router, ctxs: List[RequestContext]):
 def stage_signals(router, ctxs: List[RequestContext]):
     # the embedding plan: at most ONE backend.embed() call for the whole
     # batch's query texts, issued lazily when the first consumer (signals
-    # / cache / selection / memory) embeds — zero calls if none do.
+    # / cache / selection / memory) embeds — zero calls if none do.  The
+    # signal plan is its classifier twin: every learned (task, text) job
+    # in the batch is served by ONE fused classify_all on the classifier
+    # backend (plus one batched token_classify for PII).
     plan = ctxs[0].plan
     plan.register([c.req.latest_user_text for c in ctxs])
     # open the per-request spans BEFORE extraction so their duration
@@ -149,7 +154,8 @@ def stage_signals(router, ctxs: List[RequestContext]):
     spans = [c.root.child("signals") for c in ctxs]
     sigs = router.signals.extract_many([c.req for c in ctxs],
                                        router.used_types or None,
-                                       embed_fn=plan.embed)
+                                       embed_fn=plan.embed,
+                                       plan=ctxs[0].sig_plan)
     for c, sig_span, sig in zip(ctxs, spans, sigs):
         c.sig = sig
         for k, m in sig.matches.items():
@@ -349,7 +355,9 @@ def run_pipeline(router, reqs: Sequence[Request], *,
     if not reqs:
         return []
     plan = EmbeddingPlan(router.backend.embed)
-    ctxs = [RequestContext(req=r, plan=plan, root=Span("request"),
+    sig_plan = SignalPlan(router.classifier)
+    ctxs = [RequestContext(req=r, plan=plan, sig_plan=sig_plan,
+                           root=Span("request"),
                            t0=time.perf_counter()) for r in reqs]
     METRICS.inc("pipeline_batches_total")
     METRICS.observe("pipeline_batch_size", len(ctxs))

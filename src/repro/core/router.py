@@ -50,7 +50,13 @@ class SemanticRouter:
         attribute gets same-model requests micro-batched into one call."""
         self.config = config
         self.backend = get_backend(config.embedding_backend)
-        self.signals = SignalEngine(config.signals, self.backend)
+        # classification may run on a different substrate than embeddings
+        # (e.g. hash embeddings + fused MoM encoder classifier heads);
+        # empty classifier_backend means one backend serves both.
+        self.classifier = (get_backend(config.classifier_backend)
+                           if config.classifier_backend else self.backend)
+        self.signals = SignalEngine(config.signals, self.backend,
+                                    classifier=self.classifier)
         self.engine = DecisionEngine(config.decisions,
                                      strategy=config.strategy)
         from repro.core.types import Endpoint
@@ -61,7 +67,8 @@ class SemanticRouter:
         self.memory = MemoryStore(self.backend.embed)
         self.rag_store = VectorStoreBackend(self.backend.embed)
         self.rag = HybridRetriever(self.rag_store)
-        self.halugate = HaluGate(self.backend)
+        self.halugate = HaluGate(self.classifier,
+                                 embed_backend=self.backend)
         self.call_fn = call_fn or self._echo_call
         self.used_types = config.used_signal_types()
         self.responses_state: "OrderedDict[str, Dict[str, Any]]" = \

@@ -1,1 +1,2 @@
 from repro.core.signals.base import SignalEngine  # noqa: F401
+from repro.core.signals.plan import SignalPlan  # noqa: F401

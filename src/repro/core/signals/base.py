@@ -1,4 +1,4 @@
-"""Signal extraction orchestrator (§3.4): demand-driven, parallel.
+"""Signal extraction orchestrator (§3.4): demand-driven, parallel, fused.
 
 Only signal types referenced by at least one active decision are computed
 (T_used); heuristic evaluators run inline (sub-ms), learned evaluators run
@@ -7,10 +7,19 @@ max(evaluators) rather than the sum.  Per-signal latency is recorded into
 the SignalMatch for the observability layer.
 
 ``extract_many`` is the batch-first entry: learned-signal jobs for N
-requests are submitted as one thread-pool wave, and an optional
-``embed_fn`` (the batch's shared EmbeddingPlan) replaces the backend's
-embed so query texts embedded once per batch are reused by every
-embedding-based evaluator.
+requests are submitted as one thread-pool wave, and two per-batch plans
+replace per-evaluator backend calls:
+
+* ``embed_fn`` (the batch's shared EmbeddingPlan) serves query-text
+  embeddings embedded once per batch to every embedding-based evaluator;
+* ``plan`` (a :class:`SignalPlan` over the classifier backend) collects
+  every (task, text) classification job up front and serves all of them
+  from ONE fused ``classify_all`` call (and PII from one batched
+  ``token_classify`` call), demuxed back per evaluator.
+
+The classifier backend may differ from the embedding backend
+(``SignalEngine(cfg, backend, classifier=encoder)``): hash embeddings
+with encoder classifier heads is the production split.
 """
 
 from __future__ import annotations
@@ -22,12 +31,19 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 from repro.classifiers.backend import ClassifierBackend, get_backend
 from repro.core.signals.heuristic import HEURISTIC_EVALUATORS
 from repro.core.signals.learned import LearnedSignals
+from repro.core.signals.plan import SignalPlan
 from repro.core.types import (HEURISTIC_TYPES, Request, SignalKey,
                               SignalMatch, SignalResult)
 
 # Extensibility (§3.5): operators register domain-specific signal types here;
 # the decision engine references them by (type, name) with no engine changes.
 EXTRA_EVALUATORS: Dict[str, Any] = {}
+
+# learned signal types whose evaluator consumes backend.classify, and the
+# classifier task each maps to — the plan pre-registers these so the whole
+# batch is served by one fused classify_all
+_CLASSIFY_TASK = {"domain": "domain", "fact_check": "fact_check",
+                  "user_feedback": "user_feedback", "modality": "modality"}
 
 
 def register_signal_type(type_: str, evaluator):
@@ -38,10 +54,12 @@ def register_signal_type(type_: str, evaluator):
 class SignalEngine:
     def __init__(self, signals_cfg: Dict[str, Dict[str, Dict[str, Any]]],
                  backend: Optional[ClassifierBackend] = None,
+                 classifier: Optional[ClassifierBackend] = None,
                  max_workers: int = 8):
         self.cfg = signals_cfg
         self.backend = backend or get_backend("hash")
-        self.learned = LearnedSignals(self.backend)
+        self.classifier = classifier or self.backend
+        self.learned = LearnedSignals(self.backend, self.classifier)
         self.learned.preload(signals_cfg)
         self.pool = ThreadPoolExecutor(max_workers=max_workers)
         self._closed = False
@@ -62,17 +80,36 @@ class SignalEngine:
 
     # ------------------------------------------------------------------
     def _eval_one(self, type_: str, name: str, cfg: Dict[str, Any],
-                  req: Request,
-                  embed_fn: Optional[Callable] = None) -> SignalMatch:
+                  req: Request, embed_fn: Optional[Callable] = None,
+                  plan: Optional[SignalPlan] = None) -> SignalMatch:
         t0 = time.perf_counter()
         if type_ in HEURISTIC_EVALUATORS:
             m = HEURISTIC_EVALUATORS[type_](name, cfg, req)
         elif type_ in EXTRA_EVALUATORS:
             m = EXTRA_EVALUATORS[type_](name, cfg, req)
         else:
-            m = self.learned.evaluator(type_)(name, cfg, req, embed=embed_fn)
+            m = self.learned.evaluator(type_)(
+                name, cfg, req, embed=embed_fn,
+                classify=plan.classify if plan is not None else None,
+                token_classify=(plan.token_classify
+                                if plan is not None else None))
         m.latency_ms = (time.perf_counter() - t0) * 1e3
         return m
+
+    @staticmethod
+    def _register_job(plan: SignalPlan, type_: str, cfg: Dict[str, Any],
+                      req: Request):
+        """Record the classifier work evaluator (type_, cfg) will ask for,
+        so the plan's one fused call covers it."""
+        if type_ in _CLASSIFY_TASK:
+            plan.register(_CLASSIFY_TASK[type_], [req.latest_user_text])
+        elif type_ == "jailbreak" and \
+                cfg.get("method", "classifier") == "classifier":
+            texts = (req.user_texts if cfg.get("include_history", False)
+                     else [req.latest_user_text])
+            plan.register("jailbreak", texts)
+        elif type_ == "pii":
+            plan.register_token([req.full_text])
 
     def extract(self, req: Request,
                 used_types: Optional[Set[str]] = None,
@@ -84,10 +121,17 @@ class SignalEngine:
 
     def extract_many(self, reqs: Sequence[Request],
                      used_types: Optional[Set[str]] = None,
-                     embed_fn: Optional[Callable] = None
+                     embed_fn: Optional[Callable] = None,
+                     plan: Optional[SignalPlan] = None
                      ) -> List[SignalResult]:
         """Batched extraction: one thread-pool wave covers the learned
-        signals of every request; heuristics stay inline (sub-ms)."""
+        signals of every request; heuristics stay inline (sub-ms).  All
+        classifier jobs are pre-registered on the batch's SignalPlan
+        before any evaluator runs, so the first classifying evaluator
+        triggers exactly ONE fused ``classify_all`` (and PII one batched
+        ``token_classify``) for the entire batch."""
+        if plan is None:
+            plan = SignalPlan(self.classifier)
         results = [SignalResult() for _ in reqs]
         jobs = []
         for i, req in enumerate(reqs):
@@ -98,8 +142,11 @@ class SignalEngine:
                     if type_ in HEURISTIC_TYPES:
                         results[i].add(self._eval_one(type_, name, cfg, req))
                     else:
+                        if type_ not in EXTRA_EVALUATORS:
+                            self._register_job(plan, type_, cfg, req)
                         jobs.append((i, type_, name, cfg, req))
-        futures = [(i, self.pool.submit(self._eval_one, t, n, c, r, embed_fn))
+        futures = [(i, self.pool.submit(self._eval_one, t, n, c, r,
+                                        embed_fn, plan))
                    for i, t, n, c, r in jobs]
         for i, f in futures:
             results[i].add(f.result())

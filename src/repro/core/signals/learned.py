@@ -1,12 +1,17 @@
 """Learned signals (§3.3): embedding, domain, complexity, jailbreak (BERT +
 contrastive max-chain), PII, fact-check, feedback, modality, preference.
-All neural inference goes through the pluggable ClassifierBackend; an
-optional per-call ``embed`` override lets a batch's shared EmbeddingPlan
-serve query-text embeddings instead of re-embedding per evaluator."""
+All neural inference goes through the pluggable ClassifierBackend.
+Per-call overrides let a batch's shared plans serve the evaluators:
+``embed`` (the EmbeddingPlan) replaces per-evaluator re-embedding, and
+``classify``/``token_classify`` (the SignalPlan) replace per-evaluator
+classifier calls with demuxed rows of one fused per-batch
+``classify_all``/``token_classify`` pass.  ``classifier`` may be a
+different backend than the embedding one (e.g. hash embeddings + encoder
+classifier heads)."""
 
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -19,8 +24,10 @@ def _cos(a: np.ndarray, b: np.ndarray) -> np.ndarray:
 
 
 class LearnedSignals:
-    def __init__(self, backend: ClassifierBackend):
+    def __init__(self, backend: ClassifierBackend,
+                 classifier: Optional[ClassifierBackend] = None):
         self.backend = backend
+        self.classifier = classifier or backend
         self._ref_cache: Dict[str, np.ndarray] = {}
 
     # -- exemplar embeddings precomputed at init (paper: concurrent pool) --
@@ -45,8 +52,8 @@ class LearnedSignals:
         return self._ref_cache[key]
 
     # ------------------------------------------------------------------
-    def eval_embedding(self, name, cfg, req: Request,
-                       embed=None) -> SignalMatch:
+    def eval_embedding(self, name, cfg, req: Request, embed=None,
+                       classify=None, token_classify=None) -> SignalMatch:
         refs = self._refs(f"emb:{name}", cfg.get("reference_texts", []))
         thr = cfg.get("threshold", 0.75)
         if refs.shape[0] == 0:
@@ -56,50 +63,51 @@ class LearnedSignals:
         return SignalMatch(SignalKey("embedding", name), sim >= thr,
                            max(0.0, sim), detail={"sim": sim})
 
-    def eval_domain(self, name, cfg, req: Request,
-                    embed=None) -> SignalMatch:
+    def eval_domain(self, name, cfg, req: Request, embed=None,
+                    classify=None, token_classify=None) -> SignalMatch:
         cats = [c.lower() for c in cfg.get("mmlu_categories", [])]
-        labels, probs = self.backend.classify("domain",
-                                              [req.latest_user_text])
+        labels, probs = (classify or self.classifier.classify)(
+            "domain", [req.latest_user_text])
         conf = float(probs[0].max())
         matched = labels[0].lower() in cats
         return SignalMatch(SignalKey("domain", name), matched,
                            conf if matched else 0.0,
                            detail={"label": labels[0]})
 
-    def eval_fact_check(self, name, cfg, req: Request,
-                        embed=None) -> SignalMatch:
-        labels, probs = self.backend.classify("fact_check",
-                                              [req.latest_user_text])
+    def eval_fact_check(self, name, cfg, req: Request, embed=None,
+                        classify=None, token_classify=None) -> SignalMatch:
+        labels, probs = (classify or self.classifier.classify)(
+            "fact_check", [req.latest_user_text])
         thr = cfg.get("threshold", 0.5)
         conf = float(probs[0][1])
         return SignalMatch(SignalKey("fact_check", name),
                            conf >= thr, conf, detail={"label": labels[0]})
 
-    def eval_user_feedback(self, name, cfg, req: Request,
-                           embed=None) -> SignalMatch:
+    def eval_user_feedback(self, name, cfg, req: Request, embed=None,
+                           classify=None, token_classify=None
+                           ) -> SignalMatch:
         want = cfg.get("categories", ["dissatisfied"])
-        labels, probs = self.backend.classify("user_feedback",
-                                              [req.latest_user_text])
+        labels, probs = (classify or self.classifier.classify)(
+            "user_feedback", [req.latest_user_text])
         conf = float(probs[0].max())
         matched = labels[0] in want
         return SignalMatch(SignalKey("user_feedback", name), matched,
                            conf if matched else 0.0,
                            detail={"label": labels[0]})
 
-    def eval_modality(self, name, cfg, req: Request,
-                      embed=None) -> SignalMatch:
+    def eval_modality(self, name, cfg, req: Request, embed=None,
+                      classify=None, token_classify=None) -> SignalMatch:
         want = cfg.get("modalities", ["diffusion"])
-        labels, probs = self.backend.classify("modality",
-                                              [req.latest_user_text])
+        labels, probs = (classify or self.classifier.classify)(
+            "modality", [req.latest_user_text])
         conf = float(probs[0].max())
         matched = labels[0] in want
         return SignalMatch(SignalKey("modality", name), matched,
                            conf if matched else 0.0,
                            detail={"label": labels[0]})
 
-    def eval_complexity(self, name, cfg, req: Request,
-                        embed=None) -> SignalMatch:
+    def eval_complexity(self, name, cfg, req: Request, embed=None,
+                        classify=None, token_classify=None) -> SignalMatch:
         """Contrastive difficulty (Equation 4)."""
         hard = self._refs(f"cpx_h:{name}", cfg.get("hard_examples", []))
         easy = self._refs(f"cpx_e:{name}", cfg.get("easy_examples", []))
@@ -118,14 +126,15 @@ class LearnedSignals:
         return SignalMatch(SignalKey("complexity", name), matched, conf,
                            detail={"delta": delta, "level": level})
 
-    def eval_jailbreak(self, name, cfg, req: Request,
-                       embed=None) -> SignalMatch:
+    def eval_jailbreak(self, name, cfg, req: Request, embed=None,
+                       classify=None, token_classify=None) -> SignalMatch:
         method = cfg.get("method", "classifier")
         thr = cfg.get("threshold", 0.65 if method == "classifier" else 0.10)
         include_history = cfg.get("include_history", False)
         texts = req.user_texts if include_history else [req.latest_user_text]
         if method == "classifier":
-            labels, probs = self.backend.classify("jailbreak", texts)
+            labels, probs = (classify or self.classifier.classify)(
+                "jailbreak", texts)
             best = 0.0
             lab = "BENIGN"
             for l, p in zip(labels, probs):
@@ -150,11 +159,12 @@ class LearnedSignals:
                            detail={"delta": delta, "method": method,
                                    "turns_scored": len(deltas)})
 
-    def eval_pii(self, name, cfg, req: Request,
-                 embed=None) -> SignalMatch:
+    def eval_pii(self, name, cfg, req: Request, embed=None,
+                 classify=None, token_classify=None) -> SignalMatch:
         thr = cfg.get("threshold", 0.5)
         allow = set(cfg.get("pii_types_allowed", []))
-        spans = self.backend.token_classify([req.full_text])[0]
+        spans = (token_classify or
+                 self.classifier.token_classify)([req.full_text])[0]
         viol = [(s, e, l, c) for (s, e, l, c) in spans
                 if c >= thr and l not in allow]
         conf = max((c for *_, c in viol), default=0.0)
@@ -162,8 +172,8 @@ class LearnedSignals:
                            detail={"entities": [l for *_, l, _ in
                                    [(s, e, l, c) for s, e, l, c in viol]]})
 
-    def eval_preference(self, name, cfg, req: Request,
-                        embed=None) -> SignalMatch:
+    def eval_preference(self, name, cfg, req: Request, embed=None,
+                        classify=None, token_classify=None) -> SignalMatch:
         """Personalized routing: query vs per-profile exemplar sets."""
         profiles = cfg.get("profiles", {})
         want = cfg.get("profile", None)

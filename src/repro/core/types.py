@@ -172,6 +172,7 @@ class RouterConfig:
     default_model: str = ""
     strategy: str = "priority"    # priority | confidence
     embedding_backend: str = "hash"
+    classifier_backend: str = ""  # "" = same backend as embeddings
 
     def used_signal_types(self) -> set:
         from repro.core.decision import leaf_keys

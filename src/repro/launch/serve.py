@@ -89,10 +89,15 @@ DEMO_REQUESTS = [
 ]
 
 
-def build_router(reduced: bool = True, gen_tokens: int = 8):
+def build_router(reduced: bool = True, gen_tokens: int = 8,
+                 classifier_backend: str = "hash"):
     cfg, diags = compile_source(DSL_CONFIG)
     for d in diags:
         print(d)
+    if classifier_backend != "hash":
+        # neural signals (domain/jailbreak/... + PII) classify on this
+        # backend; embeddings stay on the hash reference backend
+        cfg.classifier_backend = classifier_backend
     archs = sorted({p.arch for p in cfg.model_profiles.values() if p.arch})
     fleet = LocalFleet(archs, reduced=reduced, gen_tokens=gen_tokens)
     m2a = {m: p.arch for m, p in cfg.model_profiles.items() if p.arch}
@@ -114,9 +119,15 @@ def main(argv=None):
                     help="front-end arrival-coalescing window (async mode)")
     ap.add_argument("--stagger-ms", type=float, default=3.0,
                     help="inter-arrival gap for the async demo workload")
+    ap.add_argument("--classifier-backend", choices=["hash", "encoder"],
+                    default="hash",
+                    help="backend for neural signal classification; "
+                         "'encoder' serves all learned signals of a batch "
+                         "from one fused multi-task encoder pass")
     args = ap.parse_args(argv)
 
-    router, fleet = build_router(gen_tokens=args.gen_tokens)
+    router, fleet = build_router(gen_tokens=args.gen_tokens,
+                                 classifier_backend=args.classifier_backend)
     reqs = [Request(messages=[Message(
                 "user", DEMO_REQUESTS[i % len(DEMO_REQUESTS)])],
                 user=f"user{i % 3}")

@@ -44,6 +44,72 @@ def test_batched_multitask_equals_single():
         np.testing.assert_allclose(multi[t], single, atol=1e-5, rtol=1e-5)
 
 
+def test_classify_all_matches_per_task_classify():
+    """Backend-level equivalence: the fused classify_all must agree with
+    per-task classify for every task — trained tasks (one batched
+    multi-task forward vs one single-task forward) to tolerance, and
+    untrained tasks (hash-fallback delegation) exactly."""
+    trained = {"domain", "fact_check", "modality"}
+    be = EncoderBackend(CFG, PARAMS, ADAPTERS, trained=set(trained))
+    tasks = ["domain", "fact_check", "modality", "jailbreak",
+             "user_feedback"]
+    out = be.classify_all(tasks, TEXTS)
+    for t in tasks:
+        labels, probs = be.classify(t, TEXTS)
+        assert out[t][0] == labels, t
+        np.testing.assert_allclose(out[t][1], probs, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(out[t][1].sum(1), 1.0, atol=1e-5)
+    # paper-faithful §9.3 baseline (one forward per task) agrees too
+    be.batched = False
+    seq = be.classify_all(tasks, TEXTS)
+    for t in tasks:
+        np.testing.assert_allclose(seq[t][1], out[t][1],
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_classify_all_untrained_delegates_to_hash():
+    from repro.classifiers.backend import HashBackend
+    be = EncoderBackend(CFG, PARAMS, ADAPTERS)          # nothing trained
+    href = HashBackend()
+    out = be.classify_all(["domain", "jailbreak"], TEXTS)
+    for t in ("domain", "jailbreak"):
+        labels, probs = href.classify(t, TEXTS)
+        assert out[t][0] == labels
+        np.testing.assert_allclose(out[t][1], probs)
+
+
+def test_halugate_upgrades_to_encoder_heads():
+    """With trained detector/nli heads, HaluGate stage 2 runs one batched
+    detector classification over answer sentences and stage 3 one batched
+    cross-encoder NLI pass — no lexical fallback involved."""
+    from repro.core.halugate import HaluGate
+    # fact_check stays on the deterministic hash tier so the sentinel
+    # reliably gates this factual query in; detector/nli use the heads
+    be = EncoderBackend(CFG, PARAMS, ADAPTERS, trained={"detector", "nli"})
+    calls = []
+    orig_det, orig_nli = be.detector, be.nli
+    be.detector = lambda s, c: calls.append(("detector", list(c))) or \
+        orig_det(s, c)
+    be.nli = lambda c, e: calls.append(("nli", len(c))) or orig_nli(c, e)
+    gate = HaluGate(be, detector_threshold=0.0)
+    context = "the war ended in 1945"
+    res = gate.run("what year did the war end", context,
+                   "It ended in 1945. The treaty was signed on the moon.")
+    assert res.gated                         # sentinel gated it in
+    assert res.spans and all(s.nli in ("ENTAILMENT", "CONTRADICTION",
+                                       "NEUTRAL") for s in res.spans)
+    # one batched detector call + one batched nli call, not per-span,
+    # and the detector sees the grounding context (pair cross-encoder)
+    det = [c for c in calls if c[0] == "detector"]
+    assert len(det) == 1 and det[0][1] == [context, context]
+    assert sum(1 for c in calls if c[0] == "nli") == 1
+    # the verdict depends on the context, not the sentences alone
+    _, p_ctx = be.detector(["It ended in 1945."], [context])
+    _, p_other = be.detector(["It ended in 1945."],
+                             ["bananas are yellow fruit"])
+    assert not np.allclose(p_ctx, p_other)
+
+
 def test_embeddings_and_matryoshka():
     be = EncoderBackend(CFG, PARAMS, ADAPTERS)
     full = be.embed(TEXTS)

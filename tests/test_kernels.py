@@ -96,6 +96,32 @@ def test_multi_lora_vs_ref(case):
                                atol=_tol(dtype), rtol=2e-2)
 
 
+@pytest.mark.parametrize("seed", [1, 2, 3, 4])
+def test_multi_lora_vs_ref_random_task_permutations(seed):
+    """The SignalPlan's fused path folds tasks into the batch dimension in
+    whatever order jobs arrive — kernel/ref equivalence must hold for any
+    permutation of per-row task assignment, including rows where some
+    tasks never appear."""
+    N, din, dout, T, r = 96, 128, 64, 5, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (N, din), jnp.float32)
+    a = jax.random.normal(ks[1], (T, din, r), jnp.float32) * 0.05
+    b = jax.random.normal(ks[2], (T, r, dout), jnp.float32) * 0.05
+    rs = np.random.RandomState(seed)
+    # block-sorted assignment vs a random permutation of it: same rows,
+    # shuffled task layout (exercises mask accumulation across tiles)
+    base = jnp.asarray(np.arange(N) % (T - 1))        # task T-1 absent
+    perm = jnp.asarray(rs.permutation(N))
+    for t in (base, base[perm]):
+        out = multi_lora(x, a, b, t)
+        ref = multi_lora_reference(x, a, b, t)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+    # permuting rows and their tasks together permutes the output rows
+    out = multi_lora(x, a, b, base)
+    out_p = multi_lora(x[perm], a, b, base[perm])
+    np.testing.assert_allclose(out_p, out[perm], atol=2e-5, rtol=2e-5)
+
+
 def test_multi_lora_fused_base():
     ks = jax.random.split(KEY, 5)
     x = jax.random.normal(ks[0], (32, 64), jnp.float32)

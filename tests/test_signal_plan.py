@@ -1,0 +1,105 @@
+"""SignalPlan property sweep: arbitrary batches (duplicate / empty /
+unicode texts) never re-classify a deduped text, issue at most one fused
+``classify_all`` base call per batch, and demultiplex results back to
+evaluators without crossing request boundaries."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")   # property tests skip cleanly
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.classifiers.backend import HashBackend  # noqa: E402
+from repro.core.signals import SignalEngine, SignalPlan  # noqa: E402
+from repro.core.types import Message, Request  # noqa: E402
+
+TASKS = ("domain", "fact_check", "modality", "user_feedback", "jailbreak")
+
+ENGINE_CFG = {
+    "domain": {"d": {"mmlu_categories": ["math"]}},
+    "fact_check": {"f": {"threshold": 0.5}},
+    "modality": {"m": {"modalities": ["diffusion"]}},
+    "jailbreak": {"j": {"method": "classifier", "threshold": 0.5}},
+    "pii": {"p": {"pii_types_allowed": []}},
+}
+
+
+class SpyBackend(HashBackend):
+    def __init__(self):
+        super().__init__()
+        self.calls = []          # classify_all invocations
+        self.token_calls = []
+
+    def classify_all(self, tasks, texts):
+        self.calls.append((list(tasks), list(texts)))
+        return super().classify_all(tasks, texts)
+
+    def token_classify(self, texts):
+        self.token_calls.append(list(texts))
+        return super().token_classify(texts)
+
+
+texts_st = st.lists(st.text(max_size=40), min_size=1, max_size=6)
+jobs_st = st.dictionaries(st.sampled_from(TASKS), texts_st,
+                          min_size=1, max_size=len(TASKS))
+
+
+@settings(max_examples=30, deadline=None)
+@given(jobs_st)
+def test_plan_single_fused_call_and_no_reclassification(jobs):
+    be = SpyBackend()
+    plan = SignalPlan(be)
+    for task, texts in jobs.items():
+        plan.register(task, texts)
+    for task, texts in jobs.items():
+        labels, probs = plan.classify(task, texts)
+        assert len(labels) == len(texts) == probs.shape[0]
+    # one fused base call serves the whole batch...
+    assert len(be.calls) <= 1
+    seen = set()
+    for tasks, texts in be.calls:
+        assert len(texts) == len(set(texts))          # texts deduped
+        for t in tasks:
+            for txt in texts:
+                assert (t, txt) not in seen           # never re-classified
+                seen.add((t, txt))
+    # ...and replaying every job is pure memo (zero further base calls)
+    n = len(be.calls)
+    for task, texts in jobs.items():
+        plan.classify(task, texts)
+    assert len(be.calls) == n
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(TASKS), texts_st)
+def test_plan_demux_matches_direct_classify(task, texts):
+    """Demultiplexed rows equal a direct backend call row-for-row, in
+    input order, duplicates included."""
+    plan = SignalPlan(SpyBackend())
+    labels, probs = plan.classify(task, texts)
+    ref_labels, ref_probs = HashBackend().classify(task, texts)
+    assert labels == ref_labels
+    np.testing.assert_allclose(probs, ref_probs)
+
+
+@settings(max_examples=15, deadline=None)
+@given(texts_st)
+def test_extract_many_demux_never_crosses_requests(texts):
+    """Every request in an arbitrary batch gets exactly the SignalMatch
+    set its own solo extraction produces — duplicates, empty strings and
+    unicode included — from at most one fused call per batch."""
+    be = SpyBackend()
+    eng = SignalEngine(ENGINE_CFG, be)
+    try:
+        reqs = [Request(messages=[Message("user", t)]) for t in texts]
+        batched = eng.extract_many(reqs)
+        assert len(be.calls) == 1 and len(be.token_calls) == 1
+        for r, b in zip(reqs, batched):
+            solo = eng.extract(r)
+            assert set(solo.matches) == set(b.matches)
+            for k in solo.matches:
+                assert solo.matches[k].matched == b.matches[k].matched
+                assert solo.matches[k].confidence == \
+                    pytest.approx(b.matches[k].confidence)
+    finally:
+        eng.close()
