@@ -18,7 +18,8 @@ def main() -> None:
                             t5_attention_scaling, t8_lora_memory,
                             t9_scenarios, t_batch_throughput,
                             t_cache_effectiveness, t_continuous_batching,
-                            t_decision_overhead, t_halugate_cost)
+                            t_decision_overhead, t_halugate_cost,
+                            t_multimodal_fleet)
     suites = {
         "t4": t4_signal_latency.run,
         "t5": t5_attention_scaling.run,
@@ -29,6 +30,7 @@ def main() -> None:
         "halugate": t_halugate_cost.run,
         "batch": t_batch_throughput.run,
         "contbatch": t_continuous_batching.run,
+        "multimodal": lambda: t_multimodal_fleet.run()[0],
         "roofline": roofline_table.run,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -86,6 +86,9 @@ _FEEDBACK_LEXICON = {
 _MODALITY_IMAGE = ["draw", "image of", "picture of", "generate an image",
                    "illustration", "render", "photo of", "sketch",
                    "painting of", "logo"]
+_MODALITY_AUDIO = ["transcribe", "transcription", "audio", "speech",
+                   "recording", "voice memo", "podcast", "voicemail",
+                   "spoken", "dictation"]
 
 _FACTUAL_CUES = ["who", "what year", "when did", "where is", "capital of",
                  "how many", "what is the", "define", "population of",
@@ -228,10 +231,14 @@ class HashBackend(ClassifierBackend):
     def _modality(self, text: str):
         tl = text.lower()
         img = sum(1 for w in _MODALITY_IMAGE if w in tl)
-        both = 1.0 if ("and" in tl and img) else 0.0
-        scores = [1.0, 1.8 * img, 0.5 * both]
+        aud = sum(1 for w in _MODALITY_AUDIO if w in tl)
+        # conjunction of an image cue with more asks ("draw X and
+        # explain Y") outranks pure diffusion; word-boundary "and" only,
+        # or "command"/"sandbox" would trigger it
+        both = 1.0 if (img and " and " in f" {tl} ") else 0.0
+        scores = [1.0, 1.8 * img, 2.4 * both, 1.8 * aud]
         p = self._scores_to_probs(scores)
-        labs = ["autoregressive", "diffusion", "both"]
+        labs = ["autoregressive", "diffusion", "both", "audio"]
         return labs[int(np.argmax(p))], p
 
     # ------------------------------------------------------------------

@@ -31,7 +31,7 @@ from repro.models.layers import dense_init, rope_tables, apply_rope, rms_norm
 TASKS = ("domain", "jailbreak", "fact_check", "user_feedback", "modality",
          "nli", "detector")
 TASK_CLASSES = {"domain": len(DOMAIN_LABELS), "jailbreak": 3,
-                "fact_check": 2, "user_feedback": 5, "modality": 3,
+                "fact_check": 2, "user_feedback": 5, "modality": 4,
                 "nli": 3, "detector": 2}
 TASK_LABELS = {
     "domain": DOMAIN_LABELS,
@@ -39,7 +39,7 @@ TASK_LABELS = {
     "fact_check": ["NO_FACT_CHECK", "NEEDS_FACT_CHECK"],
     "user_feedback": ["satisfied", "dissatisfied", "clarification",
                       "alternative", "none"],
-    "modality": ["autoregressive", "diffusion", "both"],
+    "modality": ["autoregressive", "diffusion", "both", "audio"],
     "nli": ["ENTAILMENT", "CONTRADICTION", "NEUTRAL"],
     "detector": ["SUPPORTED", "HALLUCINATED"],
 }

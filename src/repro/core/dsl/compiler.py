@@ -72,7 +72,8 @@ def compile_program(prog: Program) -> RouterConfig:
             models=list(c.get("models", [])),
             auth=str(c.get("auth", "passthrough")),
             auth_config={k: str(v) for k, v in c.get("auth_config",
-                                                     {}).items()}))
+                                                     {}).items()},
+            modality=str(c.get("modality", ""))))
 
     if prog.global_:
         g = prog.global_.config

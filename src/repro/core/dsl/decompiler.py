@@ -108,6 +108,8 @@ def decompile(cfg: RouterConfig) -> str:
         ecfg = {"address": e.address, "port": e.port, "weight": e.weight}
         if e.models:
             ecfg["models"] = e.models
+        if e.modality:
+            ecfg["modality"] = e.modality
         if e.auth != "passthrough":
             ecfg["auth"] = e.auth
             if e.auth_config:

@@ -228,14 +228,36 @@ def stage_select(router, ctxs: List[RequestContext]):
         c.outcome.model = model
 
 
+# modality-signal label -> backend lane type (Endpoint.modality values)
+LANE_OF_LABEL = {"diffusion": "image", "both": "image", "audio": "audio",
+                 "autoregressive": "text"}
+
+
+def request_lane(c: RequestContext) -> str:
+    """Backend lane for one request: the modality plugin's annotation when
+    a route ran it, else the matched modality signal's label — so the
+    ``modality`` signal alone is enough to steer endpoint selection onto
+    lane-typed endpoints.  Default: the text lane."""
+    label = c.req.metadata.get("modality")
+    if label is None and c.sig is not None:
+        for k, m in c.sig.matches.items():
+            if k.startswith("modality:") and m.matched:
+                label = m.detail.get("label")
+                break
+    return LANE_OF_LABEL.get(label, "text")
+
+
 def stage_dispatch(router, ctxs: List[RequestContext]):
-    # micro-batching: same-model requests become ONE upstream call when
-    # the transport supports it (LocalFleet fills its batch slots).
-    groups: Dict[str, List[RequestContext]] = {}
+    # micro-batching: same-model same-lane requests become ONE upstream
+    # call when the transport supports it (LocalFleet fills its batch
+    # slots); the lane key restricts endpoint selection to lane-typed
+    # endpoints (Endpoint.modality), so a mixed text/image/audio batch
+    # forms one sub-batch per backend lane.
+    groups: Dict[Tuple[str, str], List[RequestContext]] = {}
     for c in ctxs:
-        groups.setdefault(c.model, []).append(c)
-    for model, group in groups.items():
-        spans = [c.root.child("upstream", model=model,
+        groups.setdefault((c.model, request_lane(c)), []).append(c)
+    for (model, lane), group in groups.items():
+        spans = [c.root.child("upstream", model=model, lane=lane,
                               batched=len(group) > 1) for c in group]
         t0 = time.perf_counter()
         # return_errors isolates failures to the requests they belong to:
@@ -243,7 +265,8 @@ def stage_dispatch(router, ctxs: List[RequestContext]):
         # aborting the batch or re-dispatching already-answered requests.
         pairs = router.endpoint_router.dispatch_many(
             [c.req for c in group], model, router.call_fn,
-            sessions=[c.req.user for c in group], return_errors=True)
+            sessions=[c.req.user for c in group], return_errors=True,
+            modality=lane)
         group_ms = (time.perf_counter() - t0) * 1e3
         for c, span, out in zip(group, spans, pairs):
             if isinstance(out, Exception):

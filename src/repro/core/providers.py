@@ -152,22 +152,42 @@ def from_provider_payload(payload: dict, ep: Endpoint) -> Response:
 
 class EndpointRouter:
     def __init__(self, endpoints: List[Endpoint],
-                 auth: Optional[AuthFactory] = None):
+                 auth: Optional[AuthFactory] = None,
+                 cooldown_s: float = 30.0):
         self.endpoints = endpoints
         self.auth = auth or AuthFactory()
         self.health: Dict[str, bool] = {e.name: True for e in endpoints}
         self.failures: Dict[str, int] = {}
+        self.cooldown_s = cooldown_s
+        self.blacklisted_at: Dict[str, float] = {}
         self._draws = itertools.count()
 
-    def serving(self, model: str) -> List[Endpoint]:
-        eps = [e for e in self.endpoints
-               if (not e.models or model in e.models)
-               and self.health.get(e.name, True)]
+    def serving(self, model: str, modality: Optional[str] = None
+                ) -> List[Endpoint]:
+        """Endpoints able to serve ``model`` (and, when given, the request's
+        backend lane ``modality`` — endpoints with an empty modality serve
+        any lane).  A circuit-broken endpoint is excluded only while its
+        cooldown runs; afterwards it is re-admitted half-open for a probe
+        (``mark_success`` fully restores it, another failure re-arms the
+        cooldown) — without this, blacklisting was permanent: ``serving``
+        filtered the endpoint out, so ``mark_success`` could never fire."""
+        now = time.monotonic()
+        eps = []
+        for e in self.endpoints:
+            if e.models and model not in e.models:
+                continue
+            if modality and e.modality and e.modality != modality:
+                continue
+            if not self.health.get(e.name, True):
+                since = now - self.blacklisted_at.get(e.name, 0.0)
+                if since < self.cooldown_s:
+                    continue
+            eps.append(e)
         return eps
 
-    def resolve(self, model: str, session: Optional[str] = None
-                ) -> Optional[Endpoint]:
-        eps = self.serving(model)
+    def resolve(self, model: str, session: Optional[str] = None,
+                modality: Optional[str] = None) -> Optional[Endpoint]:
+        eps = self.serving(model, modality)
         if not eps:
             return None
         weights = [max(1e-6, e.weight) for e in eps]
@@ -191,14 +211,20 @@ class EndpointRouter:
         n = self.failures.get(ep.name, 0) + 1
         self.failures[ep.name] = n
         if n >= threshold:
+            # circuit opens with a timestamp: ``serving`` re-admits the
+            # endpoint half-open once ``cooldown_s`` elapses; a failed
+            # probe lands back here and re-arms the cooldown from now
             self.health[ep.name] = False
+            self.blacklisted_at[ep.name] = time.monotonic()
 
     def mark_success(self, ep: Endpoint):
         self.failures[ep.name] = 0
         self.health[ep.name] = True
+        self.blacklisted_at.pop(ep.name, None)
 
     def _with_failover(self, model: str, session: Optional[str], attempt,
-                       mark_failures: bool = True):
+                       mark_failures: bool = True,
+                       modality: Optional[str] = None):
         """Weighted selection + failover cascade shared by single and
         batched dispatch.  ``attempt(ep)`` performs the upstream call;
         any exception cascades to the next endpoint.  ``mark_failures``
@@ -209,9 +235,9 @@ class EndpointRouter:
         tried = set()
         last_err = None
         for _ in range(len(self.endpoints)):
-            ep = self.resolve(model, session)
+            ep = self.resolve(model, session, modality)
             if ep is None or ep.name in tried:
-                remaining = [e for e in self.serving(model)
+                remaining = [e for e in self.serving(model, modality)
                              if e.name not in tried]
                 if not remaining:
                     break
@@ -228,19 +254,24 @@ class EndpointRouter:
         raise RuntimeError(f"no healthy endpoint for {model}: {last_err}")
 
     def dispatch(self, req: Request, model: str, call_fn,
-                 session: Optional[str] = None) -> Tuple[Response, Endpoint]:
+                 session: Optional[str] = None,
+                 modality: Optional[str] = None
+                 ) -> Tuple[Response, Endpoint]:
         """call_fn(endpoint, payload, headers) -> provider payload.
-        Weighted selection with failover cascade to next endpoints."""
+        Weighted selection with failover cascade to next endpoints.
+        ``modality`` restricts selection to lane-compatible endpoints."""
         def attempt(ep):
             payload = to_provider_payload(req, ep, model)
             headers = self.auth.outbound_headers(req, ep)
             return from_provider_payload(call_fn(ep, payload, headers), ep), \
                 ep
-        return self._with_failover(model, session, attempt)
+        return self._with_failover(model, session, attempt,
+                                   modality=modality)
 
     def dispatch_many(self, reqs: List[Request], model: str, call_fn,
                       sessions: Optional[List[Optional[str]]] = None,
-                      return_errors: bool = False):
+                      return_errors: bool = False,
+                      modality: Optional[str] = None):
         """Micro-batched dispatch: when the transport exposes a
         ``batch_call(ep, payloads, headers_list) -> payloads`` attribute,
         same-model requests sharing a sticky endpoint become ONE batched
@@ -270,7 +301,8 @@ class EndpointRouter:
 
         def one(r, s):
             try:
-                return self.dispatch(r, model, call_fn, session=s)
+                return self.dispatch(r, model, call_fn, session=s,
+                                     modality=modality)
             except Exception as e:
                 if not return_errors:
                     raise
@@ -283,7 +315,7 @@ class EndpointRouter:
         # tiny sub-batches and defeat micro-batching)
         groups: Dict[Optional[str], List[int]] = {}
         for i, s in enumerate(sessions):
-            ep = self.resolve(model, s) if s is not None else None
+            ep = self.resolve(model, s, modality) if s is not None else None
             groups.setdefault(ep.name if ep else None, []).append(i)
         results: List[Any] = [None] * len(reqs)
         for idxs in groups.values():
@@ -302,7 +334,8 @@ class EndpointRouter:
             try:
                 pairs = self._with_failover(model, sessions[idxs[0]],
                                             attempt,
-                                            mark_failures=not return_errors)
+                                            mark_failures=not return_errors,
+                                            modality=modality)
             except Exception:
                 if not return_errors:
                     raise

@@ -131,6 +131,9 @@ class Endpoint:
     models: List[str] = field(default_factory=list)
     auth: str = "passthrough"     # api_key|oauth2|cloud_iam|passthrough|custom
     auth_config: Dict[str, str] = field(default_factory=dict)
+    # backend lane type served by this endpoint: "text" | "image" | "audio";
+    # "" serves any modality (backwards-compatible default)
+    modality: str = ""
 
 
 @dataclass

@@ -33,9 +33,20 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_host_mesh(model: int = 1) -> Mesh:
-    """Tiny mesh over the real local devices (tests / examples)."""
+    """Mesh over the real local devices (tests / examples / local fleet).
+
+    ``model > 1`` carves a model-parallel axis out of the host devices so
+    fleet members build their params and decode state sharded under
+    ``sharding/rules.py`` (large-member sharding; force extra host devices
+    with XLA_FLAGS=--xla_force_host_platform_device_count=N to exercise it
+    on CPU)."""
     import numpy as np
     devices = jax.devices()
+    if model < 1 or len(devices) < model:
+        raise RuntimeError(
+            f"model axis {model} needs at least {model} devices, have "
+            f"{len(devices)} — set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=N before importing jax to emulate more hosts")
     data = len(devices) // model
     return Mesh(np.asarray(devices[: data * model]).reshape(data, model),
                 ("data", "model"))

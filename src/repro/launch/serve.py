@@ -17,65 +17,107 @@ from repro.core.types import Message, Request
 from repro.serving.fleet import LocalFleet
 
 DSL_CONFIG = '''
-SIGNAL domain math { mmlu_categories: ["math"] }
-SIGNAL domain code { mmlu_categories: ["computer science"] }
-SIGNAL keyword urgent { operator: "any", keywords: ["urgent", "asap", "immediately"] }
-SIGNAL jailbreak jb { method: "classifier", threshold: 0.5 }
-SIGNAL pii no_pii { pii_types_allowed: [] }
-SIGNAL complexity hard {
+SIGNAL domain math {{ mmlu_categories: ["math"] }}
+SIGNAL domain code {{ mmlu_categories: ["computer science"] }}
+SIGNAL keyword urgent {{ operator: "any", keywords: ["urgent", "asap", "immediately"] }}
+SIGNAL jailbreak jb {{ method: "classifier", threshold: 0.5 }}
+SIGNAL pii no_pii {{ pii_types_allowed: [] }}
+SIGNAL complexity hard {{
   threshold: 0.05,
   level: "hard",
   hard_examples: ["prove the convergence of the series using real analysis",
                   "derive the gradient of the attention mechanism step by step"],
   easy_examples: ["what is 2 plus 2", "capital of france"]
-}
+}}
 
-ROUTE safety_block {
+ROUTE safety_block {{
   PRIORITY 1001
   WHEN jailbreak("jb") OR pii("no_pii")
   MODEL "fast-response"
-  PLUGIN fr fast_response { message: "Request blocked by safety policy." }
-}
+  PLUGIN fr fast_response {{ message: "Request blocked by safety policy." }}
+}}
 
-ROUTE hard_math (description = "complex math to the large MoE") {
+ROUTE hard_math (description = "complex math to the large MoE") {{
   PRIORITY 300
   WHEN domain("math") AND complexity("hard")
   MODEL "deepseek-v2"
-  PLUGIN c cache { threshold: 0.95 }
-}
+  PLUGIN c cache {{ threshold: 0.95 }}
+}}
 
-ROUTE math (description = "math to a mid dense model") {
+ROUTE math (description = "math to a mid dense model") {{
   PRIORITY 200
   WHEN domain("math")
   MODEL "glm4", "qwen3"
-  ALGORITHM hybrid { alpha: 0.3, beta: 0.2, gamma: 0.5 }
-}
+  ALGORITHM hybrid {{ alpha: 0.3, beta: 0.2, gamma: 0.5 }}
+}}
 
-ROUTE code {
+ROUTE code {{
   PRIORITY 200
   WHEN domain("code")
   MODEL "qwen3", "glm4"
-  ALGORITHM latency {}
-}
+  ALGORITHM latency {{}}
+}}
 
-ROUTE urgent_general {
+ROUTE urgent_general {{
   PRIORITY 150
   WHEN keyword("urgent") AND NOT domain("math")
   MODEL "qwen3"
-}
-
-BACKEND local_pool vllm { address: "127.0.0.1", port: 8000 }
-GLOBAL {
+}}
+{lane_routes}
+BACKEND local_pool vllm {{ address: "127.0.0.1", port: 8000 }}
+{lane_backends}GLOBAL {{
   default_model: "smollm",
   strategy: "priority",
-  model_profiles: {
-    "deepseek-v2": { cost_per_mtok: 2.5, quality: 0.92, arch: "deepseek-v2-236b" },
-    "qwen3": { cost_per_mtok: 0.3, quality: 0.65, arch: "qwen3-1.7b" },
-    "glm4": { cost_per_mtok: 0.9, quality: 0.8, arch: "glm4-9b" },
-    "smollm": { cost_per_mtok: 0.05, quality: 0.4, arch: "smollm-360m" }
-  }
-}
+  model_profiles: {{
+    "deepseek-v2": {{ cost_per_mtok: 2.5, quality: 0.92, arch: "deepseek-v2-236b" }},
+    "qwen3": {{ cost_per_mtok: 0.3, quality: 0.65, arch: "qwen3-1.7b" }},
+    "glm4": {{ cost_per_mtok: 0.9, quality: 0.8, arch: "glm4-9b" }},
+    "smollm": {{ cost_per_mtok: 0.05, quality: 0.4, arch: "smollm-360m" }}{lane_profiles}
+  }}
+}}
 '''
+
+# non-text lanes: modality signal + route + lane-typed endpoint + profile,
+# spliced into the DSL when --lanes enables them
+LANE_DSL = {
+    "image": dict(
+        signals='SIGNAL modality img { modalities: ["diffusion", "both"] }\n',
+        routes='''
+ROUTE image_gen (description = "diffusion requests to the image lane") {
+  PRIORITY 400
+  WHEN modality("img")
+  MODEL "sd"
+  PLUGIN mi modality { rule: "img" }
+}
+''',
+        backends='BACKEND image_pool vllm '
+                 '{ port: 8001, modality: "image" }\n',
+        profiles=',\n    "sd": { cost_per_mtok: 1.2, quality: 0.7, '
+                 'arch: "sd-tiny" }'),
+    "audio": dict(
+        signals='SIGNAL modality audio_req { modalities: ["audio"] }\n',
+        routes='''
+ROUTE transcribe (description = "audio payloads to the transcription lane") {
+  PRIORITY 400
+  WHEN modality("audio_req")
+  MODEL "whisper"
+  PLUGIN ma modality { rule: "audio_req" }
+}
+''',
+        backends='BACKEND audio_pool vllm '
+                 '{ port: 8002, modality: "audio" }\n',
+        profiles=',\n    "whisper": { cost_per_mtok: 0.2, quality: 0.6, '
+                 'arch: "whisper-tiny" }'),
+}
+
+
+def build_dsl(lanes=("text",)) -> str:
+    """Assemble the demo DSL for the requested backend lanes."""
+    extra = [LANE_DSL[l] for l in lanes if l in LANE_DSL]
+    return "".join(e["signals"] for e in extra) + DSL_CONFIG.format(
+        lane_routes="".join(e["routes"] for e in extra),
+        lane_backends="".join(e["backends"] for e in extra),
+        lane_profiles="".join(e["profiles"] for e in extra))
 
 DEMO_REQUESTS = [
     "Prove the convergence of the geometric series using real analysis",
@@ -88,10 +130,18 @@ DEMO_REQUESTS = [
     "Write an algorithm to sort a list in python",
 ]
 
+LANE_DEMO_REQUESTS = {
+    "image": ["Draw an illustration of a fox in a forest",
+              "Generate an image of a sailboat logo"],
+    "audio": ["Transcribe this voice memo from the standup",
+              "Please transcribe the attached podcast recording"],
+}
+
 
 def build_router(reduced: bool = True, gen_tokens: int = 8,
-                 classifier_backend: str = "hash"):
-    cfg, diags = compile_source(DSL_CONFIG)
+                 classifier_backend: str = "hash",
+                 lanes=("text",), model_axis: int = 1):
+    cfg, diags = compile_source(build_dsl(lanes))
     for d in diags:
         print(d)
     if classifier_backend != "hash":
@@ -99,7 +149,8 @@ def build_router(reduced: bool = True, gen_tokens: int = 8,
         # backend; embeddings stay on the hash reference backend
         cfg.classifier_backend = classifier_backend
     archs = sorted({p.arch for p in cfg.model_profiles.values() if p.arch})
-    fleet = LocalFleet(archs, reduced=reduced, gen_tokens=gen_tokens)
+    fleet = LocalFleet(archs, reduced=reduced, gen_tokens=gen_tokens,
+                       model_axis=model_axis)
     m2a = {m: p.arch for m, p in cfg.model_profiles.items() if p.arch}
     router = SemanticRouter(cfg, call_fn=fleet.call_fn(m2a))
     return router, fleet
@@ -124,12 +175,25 @@ def main(argv=None):
                     help="backend for neural signal classification; "
                          "'encoder' serves all learned signals of a batch "
                          "from one fused multi-task encoder pass")
+    ap.add_argument("--lanes", default="text",
+                    help="comma-separated backend lanes to serve "
+                         "(text,image,audio): non-text lanes add the "
+                         "modality signal routes, lane-typed endpoints and "
+                         "the diffusion/transcription fleet members")
+    ap.add_argument("--model-axis", type=int, default=1,
+                    help="mesh model-parallel axis size for fleet members "
+                         "(shard large members across devices/hosts)")
     args = ap.parse_args(argv)
 
+    lanes = tuple(l.strip() for l in args.lanes.split(",") if l.strip())
     router, fleet = build_router(gen_tokens=args.gen_tokens,
-                                 classifier_backend=args.classifier_backend)
+                                 classifier_backend=args.classifier_backend,
+                                 lanes=lanes, model_axis=args.model_axis)
+    demo = list(DEMO_REQUESTS)
+    for lane in lanes:
+        demo.extend(LANE_DEMO_REQUESTS.get(lane, []))
     reqs = [Request(messages=[Message(
-                "user", DEMO_REQUESTS[i % len(DEMO_REQUESTS)])],
+                "user", demo[i % len(demo)])],
                 user=f"user{i % 3}")
             for i in range(args.requests)]
     t0 = time.time()
@@ -150,9 +214,10 @@ def main(argv=None):
         results = [router.route(r) for r in reqs]
     n = len(results)
     for i, (resp, out) in enumerate(results):
-        text = DEMO_REQUESTS[i % len(DEMO_REQUESTS)]
+        text = demo[i % len(demo)]
+        lane = resp.usage.get("vsr_lane", "text") if resp.usage else "text"
         print(f"[{i:02d}] {text[:52]:54s} -> {out.decision or '-':14s} "
-              f"model={out.model:14s} "
+              f"model={out.model:14s} lane={lane:5s} "
               f"{'FAST' if out.fast_response else 'gen '} "
               f"cache={'H' if out.cache_hit else '.'}")
     dt = time.time() - t0
@@ -165,10 +230,11 @@ def main(argv=None):
               f"mean size {fe.stats.mean_batch:.2f} "
               f"(sizes {fe.stats.batch_sizes})")
     for arch, m in fleet.members.items():
-        occ = fleet.schedulers[arch].occupancy
-        print(f"  backend {arch:22s} calls={m.calls:3d} "
+        lane = fleet.lanes[arch]
+        print(f"  backend {arch:22s} lane={lane.modality:5s} "
+              f"calls={m.calls:3d} "
               f"tokens={m.tokens_out} prompts/drain={m.slots_per_call:.2f} "
-              f"occupancy={occ:.2f}")
+              f"occupancy={lane.occupancy:.2f}")
     from repro.core.observability import METRICS
     print("\nmetrics scrape (head):")
     print("\n".join(METRICS.scrape().splitlines()[:12]))

@@ -1,30 +1,43 @@
-"""LocalFleet: in-process model backends for end-to-end router serving.
+"""LocalFleet: in-process Mixture-of-Modality backends for router serving.
 
-Each fleet member is a (reduced or full) assigned-arch config with jitted
-single-row prefill + slot-batched decode steps and a persistent KV/SSM
-cache pool driven by a continuous-batching :class:`DecodeScheduler`
-(`serving/scheduler.py`): new prompts are prefilled into free slots of the
-in-flight decode batch instead of waiting for a full ``generate()`` cycle.
+The fleet is a set of **backend lanes** (:class:`BackendLane` protocol),
+one per member arch, each with its own batch semantics:
+
+* :class:`ARLane` — the continuous-batching autoregressive text lane: a
+  slot-based :class:`DecodeScheduler` (`serving/scheduler.py`) admits new
+  prompts into free slots of the in-flight decode batch (jitted single-row
+  prefill + per-row-position decode).
+* :class:`AudioLane` — transcription over an encoder/decoder config
+  (``whisper-tiny``): the request payload is the *audio* (stub frontend —
+  deterministic pseudo frame embeddings), fed as per-request
+  cross-attention context to the same slot scheduler; output is a
+  transcript payload.
+* :class:`DiffusionLane` — a non-autoregressive fixed-step iterative
+  denoiser stub with image-out payloads.  Slots hold latents at different
+  denoise depths; one ``step()`` advances every active latent by one
+  jitted iteration — the lane-level analogue of per-row-position decode.
+
+``LocalFleet`` owns a per-lane scheduler map and ``_drain`` interleaves
+steps across ALL involved lanes, so one ``batch_call`` carrying mixed
+text/image/audio requests makes progress on every modality concurrently.
 ``call_fn`` adapts the fleet to the router's provider transport so the
 whole §12 pipeline — signals, decisions, plugins, selection, endpoint
-failover — executes against real JAX model steps.  Content is synthetic
-(hash tokenizer, random weights); the systems path (slot admission,
-per-row-position decode, cache reuse, per-request latency metrics) is
-real.
+failover — executes against real JAX steps.  Content is synthetic (hash
+tokenizer, random weights); the systems path (slot admission, per-row
+positions, cross-lane interleaving, per-request latency metrics) is real.
 
-Correctness guarantees over the old monolithic ``generate()``:
+Concurrency: the fleet lock covers ONLY submission and bookkeeping.
+Draining happens outside it — per-lane step locks serialize the jitted
+steps while concurrent callers' requests share the same slot pools
+(continuous batching ACROSS callers), and whichever thread steps a lane
+publishes every finished request to a shared results table for the other
+callers to collect.  (Holding one lock across the whole drain made any
+single ``generate()`` block every concurrent ``batch_call``.)
 
-* rows are never decoded from pad tokens — admission prefill samples at
-  each row's last REAL token and decode runs with per-row positions, so a
-  short prompt in a mixed-length batch produces exactly the tokens it
-  would produce alone;
-* overflow prompts are queued, not silently dropped — ``generate()``
-  accepts any number of prompts and the scheduler admits them as slots
-  free up;
-* JIT compilation happens at fleet construction (``warmup=True``), so
-  first-call latency metrics no longer fold compile time into
-  ``ttft_ms``/``tpot_ms`` and latency-aware selection is not skewed
-  against the first model used.
+Sharding: ``model_axis > 1`` builds every member's params and decode
+state sharded over the mesh's "model" axis under ``sharding/rules.py``
+(via ``launch/mesh.make_host_mesh``), so large configs (e.g.
+``qwen3-moe-235b`` reduced shapes) span multiple devices/hosts.
 """
 
 from __future__ import annotations
@@ -32,8 +45,9 @@ from __future__ import annotations
 import hashlib
 import threading
 import time
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,19 +63,49 @@ from repro.sharding.ctx import sharding_rules
 
 SSM_MIXERS = ("mamba", "mlstm", "slstm")
 
+# non-AR diffusion stub archs servable as image lanes (not ModelConfigs —
+# the denoiser is the lane itself)
+DIFFUSION_ARCHS: Dict[str, dict] = {
+    "sd-tiny": dict(hw=8, steps=8),
+}
+
 
 def hash_tokens(text: str, vocab: int, max_len: int) -> np.ndarray:
     ids = []
     for w in text.lower().split():
         h = hashlib.blake2s(w.encode(), digest_size=4).digest()
         ids.append(4 + int.from_bytes(h, "little") % (vocab - 4))
-        if len(ids) >= max_len:
-            break
-    return np.asarray(ids or [4], np.int32)
+    # over-long prompts keep the TAIL: with joined multi-turn conversations
+    # the newest turns (the current question) must survive truncation, not
+    # the oldest history
+    return np.asarray(ids[-max_len:] or [4], np.int32)
+
+
+def _seed_of(text: str) -> int:
+    return int.from_bytes(
+        hashlib.blake2s(text.encode(), digest_size=4).digest(), "little")
 
 
 @dataclass
-class FleetMember:
+class MemberStats:
+    """Serving stats shared by every lane's member record."""
+    calls: int = field(default=0, kw_only=True)       # drains served
+    tokens_out: int = field(default=0, kw_only=True)  # work units produced
+    prompts_in: int = field(default=0, kw_only=True)  # real requests served
+    warmup_ms: float = field(default=0.0, kw_only=True)  # JIT compile wall
+
+    @property
+    def slots_per_call(self) -> float:
+        """Mean real prompts per generate()/batch_call drain.  A drain
+        admits any number of prompts through the slot pool, so this
+        measures batching depth per upstream call (it can exceed the
+        physical slot count); the lane's ``occupancy`` is the per-step
+        slot utilisation."""
+        return self.prompts_in / max(1, self.calls)
+
+
+@dataclass
+class FleetMember(MemberStats):
     arch: str
     cfg: object
     params: object
@@ -72,50 +116,367 @@ class FleetMember:
     max_seq: int
     prompt_cap: int              # longest admissible prompt
     exact_prefill: bool          # SSM state: no pad-bucketing allowed
-    calls: int = 0               # generate()/batch_call drains
-    tokens_out: int = 0
-    prompts_in: int = 0          # real (non-padding) prompts across all calls
-    warmup_ms: float = 0.0       # construction-time JIT compile wall clock
+
+
+@dataclass
+class DiffusionMember(MemberStats):
+    """Member record for a non-AR diffusion lane (no params/config — the
+    denoiser lives on the lane; ``tokens_out`` counts denoise
+    slot-iterations)."""
+    arch: str
+    batch: int
+
+
+# ---------------------------------------------------------------------------
+# backend lanes
+# ---------------------------------------------------------------------------
+
+class BackendLane:
+    """Protocol for one execution lane of the Mixture-of-Modality fleet.
+
+    ``modality``    lane type: "text" | "image" | "audio".
+    ``submit(prompt, max_new=) -> rid``   queue one request payload.
+    ``step() -> [finished]``              advance the lane's batch one
+                                          iteration; finished jobs carry
+                                          ``.rid`` and timing fields.
+    ``pending``     queued + in-flight count.
+    ``result(job) -> dict``               transport payload: ``content``,
+                                          ``tokens``, ``ttft_ms``,
+                                          ``tpot_ms``, ``service_ms``,
+                                          ``lane``, plus modality extras
+                                          (``image`` / ``transcript``).
+    ``warmup()``    pre-compile every production step; must not pollute
+                    serving stats.
+    ``occupancy``   mean active slots per step.
+    """
+
+    modality = "text"
+
+    def submit(self, prompt: str, max_new: Optional[int] = None) -> int:
+        raise NotImplementedError
+
+    def step(self) -> List[object]:
+        raise NotImplementedError
 
     @property
-    def slots_per_call(self) -> float:
-        """Mean real prompts per generate()/batch_call drain.  With the
-        continuous-batching scheduler a drain admits any number of
-        prompts through the slot pool, so this measures batching depth
-        per upstream call (it can exceed the physical slot count);
-        ``DecodeScheduler.occupancy`` is the per-step slot utilisation."""
-        return self.prompts_in / max(1, self.calls)
+    def pending(self) -> int:
+        raise NotImplementedError
 
+    def result(self, job) -> dict:
+        raise NotImplementedError
+
+    def warmup(self):
+        raise NotImplementedError
+
+
+class ARLane(BackendLane):
+    """Continuous-batching autoregressive lane over one fleet member."""
+
+    modality = "text"
+
+    def __init__(self, fleet: "LocalFleet", member: FleetMember):
+        self.fleet = fleet
+        self.m = member
+        self.sched = fleet._make_scheduler(member)
+
+    def submit(self, prompt: str, max_new: Optional[int] = None) -> int:
+        m = self.m
+        return self.sched.submit(
+            hash_tokens(prompt, m.cfg.vocab_size, m.prompt_cap),
+            max_new=max_new)
+
+    @property
+    def pending(self) -> int:
+        return self.sched.pending
+
+    def step(self):
+        with sharding_rules(self.fleet.mesh,
+                            R.act_rules(self.fleet.mesh, self.m.batch)):
+            return self.sched.step()
+
+    def result(self, seq) -> dict:
+        m = self.m
+        return {
+            "content": (f"[{m.arch}] {len(seq.out)} tokens: "
+                        + " ".join(str(x) for x in seq.out[:10])),
+            "tokens": list(seq.out),
+            "ttft_ms": seq.ttft_ms,
+            "tpot_ms": seq.tpot_ms,
+            "service_ms": (seq.t_done - seq.t_submit) * 1e3,
+            "lane": self.modality,
+        }
+
+    @property
+    def occupancy(self) -> float:
+        return self.sched.occupancy
+
+    def _warmup_widths(self) -> List[int]:
+        m = self.m
+        if m.exact_prefill:
+            return [4]
+        return [b for b in PREFILL_BUCKETS if b <= m.prompt_cap] + \
+            [m.prompt_cap]
+
+    def warmup(self):
+        """Compile every production step at construction: one throwaway
+        request per prompt-length bucket runs the real admit+decode path,
+        so serving-time ``ttft_ms`` never includes XLA compile time and
+        latency-aware selection is not biased against the first model
+        used.  (Exact-length archs compile per prompt length by design;
+        their decode/merge — the steady-state cost — still pre-compiles.)"""
+        m, sched = self.m, self.sched
+        t0 = time.perf_counter()
+        for w in dict.fromkeys(self._warmup_widths()):
+            self._warmup_submit(w)
+        while self.pending:
+            self.step()
+        m.warmup_ms = (time.perf_counter() - t0) * 1e3
+        # warmup traffic must not pollute serving stats
+        m.tokens_out = m.prompts_in = 0
+        sched.admitted = sched.decode_steps = sched.slot_steps = 0
+        sched._finished.clear()
+
+    def _warmup_submit(self, width: int):
+        self.sched.submit(np.full((width,), 4, np.int32), max_new=2)
+
+
+class AudioLane(ARLane):
+    """Transcription lane: the request payload is the audio (stub conv
+    frontend — deterministic pseudo frame embeddings hashed from the
+    payload), attended by the decoder as per-request cross-attention
+    context; the decoder starts from a BOS token and emits the
+    transcript."""
+
+    modality = "audio"
+
+    def _frames(self, payload: str):
+        cfg = self.m.cfg
+        rng = np.random.default_rng(_seed_of(payload))
+        f = rng.standard_normal((1, cfg.cross_ctx_len, cfg.d_model))
+        return jnp.asarray(f, jnp.dtype(cfg.dtype))
+
+    def submit(self, prompt: str, max_new: Optional[int] = None) -> int:
+        return self.sched.submit(np.asarray([4], np.int32), max_new=max_new,
+                                 cross=self._frames(prompt))
+
+    def _warmup_widths(self) -> List[int]:
+        # audio requests always decode from a 1-token BOS prompt
+        return [1]
+
+    def _warmup_submit(self, width: int):
+        self.sched.submit(np.full((width,), 4, np.int32), max_new=2,
+                          cross=self._frames("warmup"))
+
+    def result(self, seq) -> dict:
+        out = super().result(seq)
+        transcript = " ".join(f"tok{t}" for t in seq.out)
+        out["content"] = (f"[{self.m.arch}] transcript "
+                          f"{len(seq.out)} tokens: {transcript[:80]}")
+        out["transcript"] = transcript
+        return out
+
+
+@dataclass
+class DiffusionJob:
+    """One queued / in-flight / finished image request."""
+    rid: int
+    prompt: str
+    t_submit: float
+    slot: int = -1
+    steps_done: int = 0
+    t_first: float = 0.0         # first denoise iteration wall clock
+    t_done: float = 0.0
+    image: Optional[np.ndarray] = None
+
+    @property
+    def ttft_ms(self) -> float:
+        return (self.t_first - self.t_submit) * 1e3
+
+    @property
+    def tpot_ms(self) -> float:
+        if self.steps_done <= 1:
+            return 0.0
+        return (self.t_done - self.t_first) * 1e3 / (self.steps_done - 1)
+
+
+class DiffusionLane(BackendLane):
+    """Fixed-step iterative denoiser stub (non-autoregressive lane).
+
+    Own batch semantics: a fixed pool of latent slots where each slot sits
+    at its OWN denoise depth (``t_idx`` per slot); every ``step()`` admits
+    queued prompts into free slots (prompt-seeded noise latent) and runs
+    ONE jitted denoise iteration over all slots.  A latent that reaches
+    ``steps`` iterations is quantized to a uint8 image payload and its
+    slot freed — the image analogue of continuous-batching decode."""
+
+    modality = "image"
+
+    def __init__(self, member: DiffusionMember, *, hw: int = 8,
+                 steps: int = 8):
+        self.m = member
+        self.hw = hw
+        self.steps = steps
+        self.slots = member.batch
+        self.latents = jnp.zeros((self.slots, hw, hw), jnp.float32)
+        self.t_idx = np.zeros((self.slots,), np.int32)
+        self.active: List[Optional[DiffusionJob]] = [None] * self.slots
+        self.queue: Deque[DiffusionJob] = deque()
+        self._rid = 0
+        self.decode_steps = 0
+        self.slot_steps = 0
+        n = float(steps)
+
+        def denoise(lat, t):
+            # per-slot sigma schedule: sigma_t = 1 - t/N; the "noise
+            # prediction" is the latent's high-frequency residual, so the
+            # fixed-point is a smoothed (structured) image
+            sig = (1.0 - t.astype(jnp.float32) / n)[:, None, None]
+            blur = (jnp.roll(lat, 1, 1) + jnp.roll(lat, -1, 1) +
+                    jnp.roll(lat, 1, 2) + jnp.roll(lat, -1, 2)) / 4.0
+            eps_hat = lat - blur
+            return lat - sig * eps_hat
+
+        self._denoise = jax.jit(denoise, donate_argnums=(0,))
+
+    # -- protocol -----------------------------------------------------------
+
+    def submit(self, prompt: str, max_new: Optional[int] = None) -> int:
+        self._rid += 1
+        self.queue.append(DiffusionJob(self._rid, prompt,
+                                       time.perf_counter()))
+        return self._rid
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + sum(j is not None for j in self.active)
+
+    def _init_latent(self, prompt: str) -> np.ndarray:
+        rng = np.random.default_rng(_seed_of(prompt))
+        return rng.standard_normal((self.hw, self.hw)).astype(np.float32)
+
+    def step(self) -> List[DiffusionJob]:
+        done: List[DiffusionJob] = []
+        while self.queue and None in self.active:
+            slot = self.active.index(None)
+            job = self.queue.popleft()
+            job.slot = slot
+            self.latents = self.latents.at[slot].set(
+                jnp.asarray(self._init_latent(job.prompt)))
+            self.t_idx[slot] = 0
+            self.active[slot] = job
+            self.m.prompts_in += 1
+        live = [i for i, j in enumerate(self.active) if j is not None]
+        if not live:
+            return done
+        self.latents = self._denoise(self.latents, jnp.asarray(self.t_idx))
+        now = time.perf_counter()
+        self.decode_steps += 1
+        self.slot_steps += len(live)
+        self.m.tokens_out += len(live)
+        for i in live:
+            job = self.active[i]
+            job.steps_done += 1
+            self.t_idx[i] += 1
+            if job.t_first == 0.0:
+                job.t_first = now
+            if job.steps_done >= self.steps:
+                job.t_done = now
+                lat = np.asarray(self.latents[i])
+                span = float(lat.max() - lat.min()) or 1.0
+                job.image = np.clip((lat - lat.min()) / span * 255.0,
+                                    0, 255).astype(np.uint8)
+                self.active[i] = None
+                self.t_idx[i] = 0
+                done.append(job)
+        return done
+
+    def result(self, job: DiffusionJob) -> dict:
+        sig = hashlib.blake2s(job.image.tobytes(),
+                              digest_size=4).hexdigest()
+        return {
+            "content": (f"[{self.m.arch}] image {self.hw}x{self.hw} "
+                        f"steps={job.steps_done} sig={sig}"),
+            "image": {"hw": self.hw, "sig": sig,
+                      "data": job.image.flatten().tolist()},
+            "tokens": [],
+            "ttft_ms": job.ttft_ms,
+            "tpot_ms": job.tpot_ms,
+            "service_ms": (job.t_done - job.t_submit) * 1e3,
+            "lane": self.modality,
+        }
+
+    @property
+    def occupancy(self) -> float:
+        return self.slot_steps / max(1, self.decode_steps)
+
+    def warmup(self):
+        t0 = time.perf_counter()
+        self.submit("warmup")
+        while self.pending:
+            self.step()
+        self.m.warmup_ms = (time.perf_counter() - t0) * 1e3
+        self.m.tokens_out = self.m.prompts_in = 0
+        self.decode_steps = self.slot_steps = 0
+
+
+# ---------------------------------------------------------------------------
+# fleet
+# ---------------------------------------------------------------------------
 
 class LocalFleet:
     def __init__(self, archs: List[str], *, reduced: bool = True,
                  batch: int = 4, max_seq: int = 160, gen_tokens: int = 16,
-                 moe_impl: str = "ep", seed: int = 0, warmup: bool = True):
-        self.mesh = make_host_mesh()
+                 moe_impl: str = "ep", seed: int = 0, warmup: bool = True,
+                 model_axis: int = 1):
+        self.mesh = make_host_mesh(model=model_axis)
+        self.model_axis = model_axis
         self.gen_tokens = gen_tokens
-        self.members: Dict[str, FleetMember] = {}
+        self.members: Dict[str, object] = {}
+        self.lanes: Dict[str, BackendLane] = {}
+        # AR/audio decode schedulers by arch (back-compat alias into lanes)
         self.schedulers: Dict[str, DecodeScheduler] = {}
+        # the fleet lock covers submission/bookkeeping ONLY; draining runs
+        # outside it (see _drain) so concurrent callers batch together
         self._lock = threading.RLock()
+        self._step_locks: Dict[str, threading.Lock] = {}
+        self._done: "OrderedDict[Tuple[str, int], object]" = OrderedDict()
+        self._done_cv = threading.Condition()
+        self._done_cap = 4096
+        self._waiting: set = set()       # keys some drain is waiting on
         key = jax.random.PRNGKey(seed)
         for arch in archs:
-            cfg = get_reduced(arch) if reduced else get_config(arch)
-            with sharding_rules(self.mesh, R.act_rules(self.mesh, batch)):
-                pre_row, dec, merge = serve_lib.build_row_serve_steps(
-                    cfg, moe_impl=moe_impl)
-                sh = serve_lib.serve_shardings(cfg, self.mesh, batch, max_seq)
-                params = jax.jit(
-                    lambda k, c=cfg: MD.init_params(c, k),
-                    out_shardings=sh["param_sharding"])(key)
-            exact = any(s.mixer in SSM_MIXERS
-                        for g in cfg.groups for s in g.period)
-            m = FleetMember(arch, cfg, params, pre_row, dec, merge,
-                            batch, max_seq,
-                            prompt_cap=max_seq - gen_tokens - 1,
-                            exact_prefill=exact)
-            self.members[arch] = m
-            self.schedulers[arch] = self._make_scheduler(m)
+            if arch in DIFFUSION_ARCHS:
+                member = DiffusionMember(arch, batch=batch)
+                lane: BackendLane = DiffusionLane(member,
+                                                  **DIFFUSION_ARCHS[arch])
+            else:
+                cfg = get_reduced(arch) if reduced else get_config(arch)
+                with sharding_rules(self.mesh,
+                                    R.act_rules(self.mesh, batch)):
+                    pre_row, dec, merge = serve_lib.build_row_serve_steps(
+                        cfg, moe_impl=moe_impl)
+                    sh = serve_lib.serve_shardings(cfg, self.mesh, batch,
+                                                   max_seq)
+                    params = jax.jit(
+                        lambda k, c=cfg: MD.init_params(c, k),
+                        out_shardings=sh["param_sharding"])(key)
+                exact = any(s.mixer in SSM_MIXERS
+                            for g in cfg.groups for s in g.period)
+                member = FleetMember(arch, cfg, params, pre_row, dec, merge,
+                                     batch, max_seq,
+                                     prompt_cap=max_seq - gen_tokens - 1,
+                                     exact_prefill=exact)
+                lane_cls = AudioLane if cfg.family == "audio" else ARLane
+                lane = lane_cls(self, member)
+                self.schedulers[arch] = lane.sched
+            self.members[arch] = member
+            self.lanes[arch] = lane
+            self._step_locks[arch] = threading.Lock()
             if warmup:
-                self._warmup(m)
+                lane.warmup()
+
+    def modality_of(self, arch: str) -> str:
+        return self.lanes[arch].modality
 
     def _make_scheduler(self, m: FleetMember) -> DecodeScheduler:
         make_cross = None
@@ -128,87 +489,92 @@ class LocalFleet:
                 cfg, b, m.max_seq),
             make_cross_fn=make_cross)
 
-    def _warmup(self, m: FleetMember):
-        """Compile every production step at construction: one throwaway
-        request per prompt-length bucket runs the real admit+decode path,
-        so serving-time ``ttft_ms`` never includes XLA compile time and
-        latency-aware selection is not biased against the first model
-        used.  (Exact-length archs compile per prompt length by design;
-        their decode/merge — the steady-state cost — still pre-compiles.)"""
-        sched = self.schedulers[m.arch]
-        widths = [4] if m.exact_prefill else [
-            b for b in PREFILL_BUCKETS if b <= m.prompt_cap] + [m.prompt_cap]
-        t0 = time.perf_counter()
-        with sharding_rules(self.mesh, R.act_rules(self.mesh, m.batch)):
-            for w in dict.fromkeys(widths):
-                sched.submit(np.full((w,), 4, np.int32), max_new=2)
-            sched.drain()
-        m.warmup_ms = (time.perf_counter() - t0) * 1e3
-        # warmup traffic must not pollute serving stats
-        m.tokens_out = m.prompts_in = 0
-        sched.admitted = sched.decode_steps = sched.slot_steps = 0
-        sched._finished.clear()
-
     # -- generation ---------------------------------------------------------
 
     def generate(self, arch: str, prompts: List[str],
                  max_new: Optional[int] = None) -> List[dict]:
-        """Greedy generation via the continuous-batching scheduler.  Any
-        number of prompts is accepted: overflow beyond the slot count is
-        queued and admitted as slots free (never silently dropped)."""
+        """Greedy generation (or image/transcript synthesis) via the
+        arch's lane.  Any number of prompts is accepted: overflow beyond
+        the slot count is queued and admitted as slots free (never
+        silently dropped).  Only submission holds the fleet lock, so
+        concurrent callers' requests share the in-flight batch."""
         with self._lock:
-            m = self.members[arch]
-            m.calls += 1
+            self.members[arch].calls += 1
             rids = self._submit(arch, prompts, max_new)
-            seqs = self._drain({arch: rids})
-            return [self._result(m, seqs[r]) for r in rids]
+        seqs = self._drain({arch: rids})
+        lane = self.lanes[arch]
+        return [lane.result(seqs[(arch, r)]) for r in rids]
 
     def _submit(self, arch: str, prompts: List[str],
                 max_new: Optional[int] = None) -> List[int]:
-        m = self.members[arch]
-        sched = self.schedulers[arch]
-        return [sched.submit(hash_tokens(p, m.cfg.vocab_size, m.prompt_cap),
-                             max_new=max_new)
-                for p in prompts]
+        lane = self.lanes[arch]
+        return [lane.submit(p, max_new=max_new) for p in prompts]
 
-    def _drain(self, rids_by_arch: Dict[str, List[int]]) -> Dict[int, object]:
-        """Round-robin step every involved scheduler until all request ids
-        have finished — cross-arch decode interleaving under one drain."""
-        seqs: Dict[int, object] = {}
-        want = {arch: set(rids) for arch, rids in rids_by_arch.items()}
-        while any(want.values()):
-            for arch, outstanding in want.items():
-                if not outstanding:
-                    continue
-                sched = self.schedulers[arch]
-                with sharding_rules(
-                        self.mesh,
-                        R.act_rules(self.mesh, self.members[arch].batch)):
-                    for seq in sched.step():
-                        if seq.rid in outstanding:
-                            outstanding.remove(seq.rid)
-                            seqs[seq.rid] = seq
+    def _drain(self, rids_by_arch: Dict[str, List[int]]
+               ) -> Dict[Tuple[str, int], object]:
+        """Interleave steps across every involved lane until all request
+        ids have finished — cross-lane (text/image/audio) progress under
+        one drain.  Runs WITHOUT the fleet lock: per-lane step locks
+        serialize the jitted steps, and any thread stepping a lane
+        publishes every request it finishes (its own or a concurrent
+        caller's) to the shared results table, waking waiters."""
+        all_keys = {(a, r) for a, rids in rids_by_arch.items() for r in rids}
+        want = set(all_keys)
+        seqs: Dict[Tuple[str, int], object] = {}
+        with self._done_cv:
+            # results a live drain waits on are exempt from table eviction
+            # (an abandoned caller's results age out; ours must not)
+            self._waiting |= want
+        try:
+            while want:
+                stepped = False
+                for arch in rids_by_arch:
+                    if not any(k[0] == arch for k in want):
+                        continue
+                    lock = self._step_locks[arch]
+                    if not lock.acquire(blocking=False):
+                        continue    # another caller is stepping this lane
+                    try:
+                        lane = self.lanes[arch]
+                        if lane.pending:
+                            finished = lane.step()
+                            stepped = True
+                        else:
+                            finished = []
+                    finally:
+                        lock.release()
+                    if finished:
+                        with self._done_cv:
+                            for seq in finished:
+                                self._done[(arch, seq.rid)] = seq
+                            if len(self._done) > self._done_cap:
+                                for k in list(self._done):
+                                    if len(self._done) <= self._done_cap:
+                                        break
+                                    if k not in self._waiting:
+                                        del self._done[k]
+                            self._done_cv.notify_all()
+                with self._done_cv:
+                    ready = want & self._done.keys()
+                    for k in ready:
+                        seqs[k] = self._done.pop(k)
+                    want -= ready
+                    if want and not stepped and not ready:
+                        # nothing runnable here: another caller is stepping
+                        # our lanes — wait for it to publish our results
+                        self._done_cv.wait(0.002)
+        finally:
+            with self._done_cv:
+                self._waiting -= all_keys
         return seqs
-
-    def _result(self, m: FleetMember, seq) -> dict:
-        service_ms = (seq.t_done - seq.t_submit) * 1e3
-        return {
-            "content": (f"[{m.arch}] {len(seq.out)} tokens: "
-                        + " ".join(str(x) for x in seq.out[:10])),
-            "tokens": list(seq.out),
-            "ttft_ms": seq.ttft_ms,
-            "tpot_ms": seq.tpot_ms,
-            "service_ms": service_ms,
-        }
 
     # -- router transport -----------------------------------------------------
     def call_fn(self, model_to_arch: Dict[str, str]):
-        """Router transport over the continuous-batching scheduler: the
-        returned callable serves single requests; its ``batch_call``
-        attribute submits every payload to its backend's scheduler up
-        front and drains them together, so same-arch requests share
-        decode steps and there is no fixed-chunk micro-batching layer —
-        the slot pool itself is the batching boundary."""
+        """Router transport over the modality lanes: the returned callable
+        serves single requests; its ``batch_call`` attribute submits every
+        payload to its arch's lane up front and drains them together, so
+        same-arch requests share steps (the slot pool is the batching
+        boundary) and different-lane sub-batches progress interleaved."""
 
         def _resolve(payload):
             model = payload.get("model") or payload.get("modelId", "")
@@ -217,20 +583,30 @@ class LocalFleet:
                 raise RuntimeError(f"fleet has no backend for {model!r}")
             msgs = payload.get("messages") or \
                 payload.get("body", {}).get("messages") or []
-            prompt = msgs[-1]["content"] if msgs else ""
+            # the WHOLE conversation feeds generation — feeding only
+            # msgs[-1] silently dropped multi-turn context from both the
+            # scheduler prompt and usage accounting
+            prompt = "\n".join(m["content"] for m in msgs)
             return model, arch, prompt
 
         def _wrap(model, prompt, out):
-            return {"choices": [{"message": {"content": out["content"]},
+            message = {"content": out["content"]}
+            for extra in ("image", "transcript"):
+                if extra in out:
+                    message[extra] = out[extra]
+            return {"choices": [{"message": message,
                                  "finish_reason": "stop"}],
                     "model": model,
+                    # prompt_tokens counts the JOINED conversation, same
+                    # text the scheduler generated from
                     "usage": {"prompt_tokens": len(prompt) // 4,
                               "completion_tokens": len(out["tokens"]),
                               # per-request transport service time: the
                               # pipeline attributes THIS to latency-aware
                               # selection instead of batch wall clock
                               "vsr_service_ms": round(out["service_ms"], 3),
-                              "vsr_ttft_ms": round(out["ttft_ms"], 3)}}
+                              "vsr_ttft_ms": round(out["ttft_ms"], 3),
+                              "vsr_lane": out.get("lane", "text")}}
 
         def call(ep, payload, headers):
             model, arch, prompt = _resolve(payload)
@@ -248,9 +624,9 @@ class LocalFleet:
                     rid_of.append(rid)
                 for arch in rids_by_arch:
                     self.members[arch].calls += 1
-                seqs = self._drain(rids_by_arch)
+            seqs = self._drain(rids_by_arch)
             return [_wrap(model, prompt,
-                          self._result(self.members[arch], seqs[rid]))
+                          self.lanes[arch].result(seqs[(arch, rid)]))
                     for (model, arch, prompt), rid in zip(resolved, rid_of)]
 
         call.batch_call = batch_call

@@ -69,6 +69,7 @@ class SequenceState:
     t_first: float = 0.0            # first-token wall clock
     t_done: float = 0.0
     out: List[int] = field(default_factory=list)
+    cross: Optional[object] = None  # per-request cross-attn context (1,T,d)
 
     @property
     def ttft_ms(self) -> float:
@@ -119,14 +120,16 @@ class DecodeScheduler:
 
     # -- public API ---------------------------------------------------------
 
-    def submit(self, ids: np.ndarray, *, max_new: Optional[int] = None
-               ) -> int:
+    def submit(self, ids: np.ndarray, *, max_new: Optional[int] = None,
+               cross: Optional[object] = None) -> int:
         """Queue one tokenized prompt; returns a request id whose result
-        is delivered by a later ``step()``."""
+        is delivered by a later ``step()``.  ``cross`` is an optional
+        per-request cross-attention context (e.g. the audio lane's encoded
+        frames); members without cross-attention ignore it."""
         self._rid += 1
         seq = SequenceState(rid=self._rid, ids=np.asarray(ids, np.int32),
                             max_new=max_new or self.gen_tokens,
-                            t_submit=time.perf_counter())
+                            t_submit=time.perf_counter(), cross=cross)
         self.queue.append(seq)
         return self._rid
 
@@ -174,7 +177,8 @@ class DecodeScheduler:
             args = [m.params, jnp.asarray(toks), jnp.asarray(lens),
                     self._row_cache0]
             if self._make_cross is not None:
-                args.append(self._make_cross(1))
+                args.append(seq.cross if seq.cross is not None
+                            else self._make_cross(1))
             nxt, row_cache = m.prefill_row(*args)
             self.cache = m.merge_row(self.cache, row_cache, slot)
             first = int(np.asarray(nxt)[0])

@@ -1,0 +1,233 @@
+"""Endpoint health: circuit-breaker cooldown/half-open recovery (BUGFIX —
+blacklisting used to be permanent because ``serving()`` filtered the
+endpoint out forever, so ``mark_success`` could never fire), failover
+paths under the recovery semantics, lane-typed endpoint filtering, and
+the modality-routed three-lane ``route_batch`` e2e scenario."""
+
+import time
+
+import pytest
+
+from repro.core.providers import EndpointRouter
+from repro.core.types import Endpoint, Message, Request
+
+
+def _req(text="hello"):
+    return Request(messages=[Message("user", text)])
+
+
+def _ok(model="m", content="ok"):
+    return {"choices": [{"message": {"content": content},
+                         "finish_reason": "stop"}],
+            "model": model, "usage": {}}
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker: cooldown + half-open re-probe
+# ---------------------------------------------------------------------------
+
+def test_blacklisted_endpoint_recovers_after_cooldown():
+    """REGRESSION: 3 failures open the circuit; the endpoint must be
+    re-admitted (half-open) once the cooldown elapses so a probe can
+    restore it via mark_success."""
+    ep = Endpoint("flaky", "vllm", models=["m"])
+    er = EndpointRouter([ep], cooldown_s=0.05)
+    for _ in range(3):
+        er.mark_failure(ep)
+    assert er.serving("m") == []             # circuit open
+    assert er.health["flaky"] is False
+    time.sleep(0.06)
+    assert [e.name for e in er.serving("m")] == ["flaky"]   # half-open
+    er.mark_success(ep)                       # probe succeeded
+    assert er.health["flaky"] is True
+    assert er.failures["flaky"] == 0
+    assert "flaky" not in er.blacklisted_at
+
+
+def test_half_open_probe_failure_rearms_cooldown():
+    ep = Endpoint("flaky", "vllm", models=["m"])
+    er = EndpointRouter([ep], cooldown_s=0.05)
+    for _ in range(3):
+        er.mark_failure(ep)
+    time.sleep(0.06)
+    assert er.serving("m"), "half-open re-admission missing"
+    t_open = er.blacklisted_at["flaky"]
+    er.mark_failure(ep)                       # probe failed
+    assert er.blacklisted_at["flaky"] > t_open
+    assert er.serving("m") == []             # cooled down again
+
+
+def test_circuit_broken_endpoint_readmitted_end_to_end():
+    """Dispatch drives the full loop: a transport that fails on 'bad'
+    blacklists it, traffic flows via 'good'; once the cooldown elapses
+    and the transport heals, 'bad' rejoins the weighted draw and serves
+    again."""
+    bad_healthy = {"v": False}
+
+    def call(ep, payload, headers):
+        if ep.name == "bad" and not bad_healthy["v"]:
+            raise RuntimeError("upstream 503")
+        return _ok(content=ep.name)
+
+    eps = [Endpoint("bad", "vllm", weight=100.0, models=["m"]),
+           Endpoint("good", "vllm", weight=1.0, models=["m"])]
+    er = EndpointRouter(eps, cooldown_s=0.05)
+    for _ in range(3):                        # three strikes via failover
+        resp, ep = er.dispatch(_req(), "m", call)
+        assert ep.name == "good"
+    assert er.health["bad"] is False
+    assert [e.name for e in er.serving("m")] == ["good"]
+    # heal the upstream and let the cooldown elapse
+    bad_healthy["v"] = True
+    time.sleep(0.06)
+    assert {e.name for e in er.serving("m")} == {"bad", "good"}
+    drawn = set()
+    for _ in range(20):
+        resp, ep = er.dispatch(_req(), "m", call)
+        drawn.add(ep.name)
+    assert "bad" in drawn                     # rejoined the weighted draw
+    assert er.health["bad"] is True
+
+
+def test_dispatch_many_sticky_subbatch_retried_on_next_endpoint():
+    """Failover under recovery semantics: a sub-batch whose sticky
+    endpoint fails is retried WHOLE on the next endpoint; repeated
+    failures open the circuit, and after cooldown the endpoint is
+    half-open for the next batched draw."""
+    calls = {"bad": 0, "good": 0}
+
+    def call(ep, payload, headers):
+        return _ok()
+
+    def batch_call(ep, payloads, headers_list):
+        calls[ep.name] += 1
+        if ep.name == "bad":
+            raise RuntimeError("batched upstream down")
+        return [_ok(content=f"{ep.name}:{i}")
+                for i in range(len(payloads))]
+
+    call.batch_call = batch_call
+    eps = [Endpoint("bad", "vllm", weight=100.0, models=["m"]),
+           Endpoint("good", "vllm", weight=1.0, models=["m"])]
+    er = EndpointRouter(eps, cooldown_s=0.05)
+    reqs = [_req(f"q{i}") for i in range(4)]
+    pairs = er.dispatch_many(reqs, "m", call, sessions=["u"] * 4)
+    assert calls == {"bad": 1, "good": 1}     # whole sub-batch retried once
+    assert [ep.name for _, ep in pairs] == ["good"] * 4
+    # two more failed draws open the circuit on 'bad'
+    for _ in range(2):
+        er.dispatch_many(reqs, "m", call, sessions=["u"] * 4)
+    assert er.health["bad"] is False
+    n_bad = calls["bad"]
+    er.dispatch_many(reqs, "m", call, sessions=["u"] * 4)
+    assert calls["bad"] == n_bad              # cooled down: never attempted
+    time.sleep(0.06)
+    er.dispatch_many(reqs, "m", call, sessions=["u"] * 4)
+    assert calls["bad"] == n_bad + 1          # half-open probe happened
+
+
+# ---------------------------------------------------------------------------
+# lane-typed endpoints
+# ---------------------------------------------------------------------------
+
+def test_serving_filters_by_endpoint_modality():
+    eps = [Endpoint("any", "vllm"),
+           Endpoint("img", "vllm", modality="image"),
+           Endpoint("aud", "vllm", modality="audio")]
+    er = EndpointRouter(eps)
+    assert {e.name for e in er.serving("m")} == {"any", "img", "aud"}
+    assert {e.name for e in er.serving("m", "image")} == {"any", "img"}
+    assert {e.name for e in er.serving("m", "audio")} == {"any", "aud"}
+    assert {e.name for e in er.serving("m", "text")} == {"any"}
+    ep = er.resolve("m", modality="audio")
+    assert ep.name in ("any", "aud")
+
+
+def test_dsl_modality_endpoint_key_round_trips():
+    from repro.core.dsl import compile_source
+    from repro.core.dsl.decompiler import decompile
+    src = ('BACKEND img_pool vllm '
+           '{ port: 8001, modality: "image" }\n'
+           'GLOBAL { default_model: "m", strategy: "priority" }\n')
+    cfg, diags = compile_source(src)
+    assert cfg.endpoints[0].modality == "image"
+    cfg2, _ = compile_source(decompile(cfg))
+    assert cfg2.endpoints[0].modality == "image"
+    assert cfg2.endpoints[0].name == "img_pool"
+
+
+# ---------------------------------------------------------------------------
+# modality e2e: text + image + audio in ONE route_batch
+# ---------------------------------------------------------------------------
+
+MOM_DSL = '''
+SIGNAL modality img { modalities: ["diffusion", "both"] }
+SIGNAL modality aud { modalities: ["audio"] }
+
+ROUTE image_gen {
+  PRIORITY 400
+  WHEN modality("img")
+  MODEL "sd"
+}
+
+ROUTE transcribe {
+  PRIORITY 400
+  WHEN modality("aud")
+  MODEL "whisper"
+}
+
+BACKEND text_pool vllm { port: 8000, modality: "text" }
+BACKEND image_pool vllm { port: 8001, modality: "image" }
+BACKEND audio_pool vllm { port: 8002, modality: "audio" }
+GLOBAL {
+  default_model: "smollm",
+  strategy: "priority",
+  model_profiles: {
+    "smollm": { cost_per_mtok: 0.05, quality: 0.4, arch: "smollm-360m" },
+    "sd": { cost_per_mtok: 1.2, quality: 0.7, arch: "sd-tiny" },
+    "whisper": { cost_per_mtok: 0.2, quality: 0.6, arch: "whisper-tiny" }
+  }
+}
+'''
+
+
+def test_mixed_modality_batch_routes_three_lanes_one_route_batch():
+    """Acceptance scenario: the modality signal routes a text+image+audio
+    batch to three distinct backend lanes — and their lane-typed
+    endpoints — inside ONE route_batch call."""
+    from repro.core.dsl import compile_source
+    from repro.core.router import SemanticRouter
+    from repro.serving.fleet import LocalFleet
+
+    cfg, _ = compile_source(MOM_DSL)
+    fleet = LocalFleet(["smollm-360m", "sd-tiny", "whisper-tiny"],
+                       reduced=True, batch=3, gen_tokens=4)
+    m2a = {m: p.arch for m, p in cfg.model_profiles.items() if p.arch}
+    router = SemanticRouter(cfg, call_fn=fleet.call_fn(m2a))
+    reqs = [
+        Request(messages=[Message("user", "summarize the incident report")]),
+        Request(messages=[Message(
+            "user", "draw an illustration of a fox in a forest")]),
+        Request(messages=[Message(
+            "user", "transcribe this voice memo recording")]),
+    ]
+    results = router.route_batch(reqs)
+    assert len(results) == 3
+    (r_text, o_text), (r_img, o_img), (r_aud, o_aud) = results
+    assert (o_text.decision, o_img.decision, o_aud.decision) == \
+        (None, "image_gen", "transcribe")
+    assert (o_text.model, o_img.model, o_aud.model) == \
+        ("smollm", "sd", "whisper")
+    # per-request lane reported by the transport
+    assert r_text.usage["vsr_lane"] == "text"
+    assert r_img.usage["vsr_lane"] == "image"
+    assert r_aud.usage["vsr_lane"] == "audio"
+    # lane-typed endpoint selection
+    assert o_text.endpoint == "text_pool"
+    assert o_img.endpoint == "image_pool"
+    assert o_aud.endpoint == "audio_pool"
+    # every lane actually executed work in the one batch
+    assert fleet.members["smollm-360m"].prompts_in == 1
+    assert fleet.members["sd-tiny"].prompts_in == 1
+    assert fleet.members["whisper-tiny"].prompts_in == 1
+    router.close()

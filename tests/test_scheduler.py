@@ -43,11 +43,11 @@ def test_slot_admission_eviction_and_per_row_positions(fleet):
         assert sched.pos[slot] == want + 1, (slot, sched.pos)
     assert all(len(sched.active[s].out) == 2 for s in range(3))
 
-    seqs = fleet._drain({ARCH: rids})
-    assert sorted(seqs) == sorted(rids)
+    seqs = fleet._drain({ARCH: rids})       # keyed (arch, rid) across lanes
+    assert sorted(r for _, r in seqs) == sorted(rids)
     assert all(len(s.out) == 6 for s in seqs.values())
     # eviction + reuse: the late arrival decoded in a recycled slot
-    assert seqs[rids[3]].slot in (0, 1, 2)
+    assert seqs[(ARCH, rids[3])].slot in (0, 1, 2)
     assert all(s is None for s in sched.active)
     assert (sched.pos == 0).all()
 
