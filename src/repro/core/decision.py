@@ -11,6 +11,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.types import Decision, SignalKey, SignalResult
 
 
@@ -233,58 +235,119 @@ def subsumes(a: RuleNode, b: RuleNode, max_vars: int = 14) -> bool:
 # JAX batch evaluator: decision set -> jit'd gate over (B, N) signal batches
 # ---------------------------------------------------------------------------
 
-def build_batch_evaluator(decisions: Sequence[Decision]):
-    """Compile the decision set to a jit'd function
-    (match (B,N) f32, conf (B,N) f32) -> (decision_idx (B,), conf (B,))
-    implementing Algorithm 1 with priority strategy — the symbolic-MoE gate
-    as an on-device batched op."""
+def build_decision_gate(decisions: Sequence[Decision],
+                        strategy: str = "priority", fuzzy: bool = False,
+                        fuzzy_threshold: float = 0.5):
+    """Compile a decision set to ONE jit'd batch gate with full
+    :class:`DecisionEngine` parity:
+
+        (match (B,N) f32, conf (B,N) f32)
+            -> (idx (B,) i32, conf (B,) f32, gates (B,D) f32, scores (B,D) f32)
+
+    * crisp mode gates on the match bits; a decision's score is the mean
+      confidence over its satisfied leaf occurrences (Equation 7,
+      duplicate leaves counted exactly as ``confidence()`` counts them);
+    * fuzzy mode (Definition 6) evaluates the (min, max, 1-x) tree over
+      confidences; a decision matches when its score clears
+      ``fuzzy_threshold`` and the score is the reported confidence;
+    * ``priority`` selection applies a STATIC rank permutation sorted by
+      (-priority, declaration order) and takes the first matching
+      decision — exact tie-breaking, unlike the old
+      ``1e6 + p*1e3 - order`` float packing, which collapsed distinct
+      (priority, order) pairs once priorities grew past the packing's
+      mantissa budget;
+    * ``confidence`` selection takes the matched decision with the
+      highest score; argmax's first-max rule reproduces the sequential
+      engine's first-declared tie-break.
+
+    ``gates``/``scores`` are returned so the caller can rebuild the full
+    ``EngineResult.matched`` list without a second device round trip.
+    """
+    assert strategy in ("priority", "confidence")
     import jax
     import jax.numpy as jnp
 
     keys = sorted({str(k) for d in decisions for k in leaf_keys(d.rule)})
     key_idx = {k: i for i, k in enumerate(keys)}
+    D, N = len(decisions), len(keys)
 
-    def node_fn(node, m):
+    def node_fn(node, v):
+        # min/max/1-x works for both modes: over {0,1} match bits min is
+        # conjunction, max is disjunction, 1-x is negation (Equation 6);
+        # over confidences it is the fuzzy algebra (Definition 6).
         if node.op == "leaf":
-            return m[:, key_idx[str(node.key)]]
+            return v[:, key_idx[str(node.key)]]
         if node.op == "and":
-            out = node_fn(node.children[0], m)
+            out = node_fn(node.children[0], v)
             for c in node.children[1:]:
-                out = out * node_fn(c, m)
+                out = jnp.minimum(out, node_fn(c, v))
             return out
         if node.op == "or":
-            out = node_fn(node.children[0], m)
+            out = node_fn(node.children[0], v)
             for c in node.children[1:]:
-                out = jnp.maximum(out, node_fn(c, m))
+                out = jnp.maximum(out, node_fn(c, v))
             return out
-        return 1.0 - node_fn(node.children[0], m)
+        return 1.0 - node_fn(node.children[0], v)
 
-    leaf_masks = []
-    for d in decisions:
-        mask = jnp.zeros((len(keys),))
+    # leaf occurrence COUNTS (not a 0/1 mask): confidence() iterates
+    # leaf_keys() with duplicates, so a key referenced twice weighs twice
+    leaf_counts = np.zeros((D, N), np.float32)
+    for di, d in enumerate(decisions):
         for k in leaf_keys(d.rule):
-            mask = mask.at[key_idx[str(k)]].set(1.0)
-        leaf_masks.append(mask)
-    leaf_masks = jnp.stack(leaf_masks) if decisions else jnp.zeros((0, len(keys)))
-    priorities = jnp.asarray([d.priority for d in decisions], jnp.float32)
-    order = jnp.arange(len(decisions), dtype=jnp.float32)
+            leaf_counts[di, key_idx[str(k)]] += 1.0
+    leaf_counts = jnp.asarray(leaf_counts)
+    # static selection rank: highest priority first, declaration order
+    # breaking ties — argmax over the permuted gates returns the FIRST
+    # matching decision in this exact order
+    rank = sorted(range(D), key=lambda i: (-decisions[i].priority, i))
+    rank_arr = jnp.asarray(rank or [0], jnp.int32)
 
     @jax.jit
     def evaluate(match, conf):
+        match = jnp.asarray(match, jnp.float32)
+        conf = jnp.asarray(conf, jnp.float32)
         B = match.shape[0]
-        gates = jnp.stack([node_fn(d.rule, match) for d in decisions],
-                          axis=1) if decisions else jnp.zeros((B, 0))
-        sat = match[:, None, :] * leaf_masks[None]          # (B,D,N)
-        csum = (conf[:, None, :] * sat).sum(-1)
-        cnum = jnp.maximum(sat.sum(-1), 1.0)
-        dconf = csum / cnum                                  # (B,D)
-        score = gates * (1e6 + priorities[None] * 1e3 - order[None])
-        idx = jnp.argmax(score, axis=1)
+        if D == 0:
+            return (jnp.full((B,), -1, jnp.int32), jnp.zeros((B,)),
+                    jnp.zeros((B, 0)), jnp.zeros((B, 0)))
+        if fuzzy:
+            scores = jnp.stack([node_fn(d.rule, conf) for d in decisions],
+                               axis=1)                       # (B,D)
+            gates = (scores >= fuzzy_threshold).astype(jnp.float32)
+        else:
+            gates = jnp.stack([node_fn(d.rule, match) for d in decisions],
+                              axis=1)                        # (B,D)
+            sat = match[:, None, :] * leaf_counts[None]      # (B,D,N)
+            csum = (conf[:, None, :] * sat).sum(-1)
+            cnum = jnp.maximum(sat.sum(-1), 1.0)
+            scores = csum / cnum                             # (B,D)
         any_match = gates.max(axis=1) > 0
-        idx = jnp.where(any_match, idx, -1)
+        if strategy == "priority":
+            pos = jnp.argmax(gates[:, rank_arr], axis=1)
+            idx = rank_arr[pos]
+        else:
+            idx = jnp.argmax(jnp.where(gates > 0, scores, -jnp.inf),
+                             axis=1).astype(jnp.int32)
+        idx = jnp.where(any_match, idx, -1).astype(jnp.int32)
         c = jnp.where(any_match,
-                      jnp.take_along_axis(dconf, jnp.maximum(idx, 0)[:, None],
+                      jnp.take_along_axis(scores, jnp.maximum(idx, 0)[:, None],
                                           axis=1)[:, 0], 0.0)
+        return idx, c, gates, scores
+
+    return evaluate, keys
+
+
+def build_batch_evaluator(decisions: Sequence[Decision]):
+    """Compile the decision set to a jit'd function
+    (match (B,N) f32, conf (B,N) f32) -> (decision_idx (B,), conf (B,))
+    implementing Algorithm 1 with priority strategy — the symbolic-MoE gate
+    as an on-device batched op.  Thin wrapper over
+    :func:`build_decision_gate` (kept for its original two-output
+    signature)."""
+    gate, keys = build_decision_gate(decisions, strategy="priority")
+
+    def evaluate(match, conf):
+        idx, c, _, _ = gate(match, conf)
         return idx, c
 
     return evaluate, keys

@@ -79,6 +79,8 @@ def compile_program(prog: Program) -> RouterConfig:
         g = prog.global_.config
         cfg.default_model = str(g.get("default_model", ""))
         cfg.strategy = str(g.get("strategy", "priority"))
+        cfg.fuzzy = bool(g.get("fuzzy", False))
+        cfg.fuzzy_threshold = float(g.get("fuzzy_threshold", 0.5))
         cfg.embedding_backend = str(g.get("embedding_backend", "hash"))
         cfg.classifier_backend = str(g.get("classifier_backend", ""))
         for mname, prof in g.get("model_profiles", {}).items():

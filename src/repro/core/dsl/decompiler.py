@@ -122,6 +122,10 @@ def decompile(cfg: RouterConfig) -> str:
     if cfg.default_model:
         g["default_model"] = cfg.default_model
     g["strategy"] = cfg.strategy
+    if cfg.fuzzy:
+        g["fuzzy"] = True
+    if cfg.fuzzy_threshold != 0.5:
+        g["fuzzy_threshold"] = cfg.fuzzy_threshold
     if cfg.embedding_backend != "hash":
         g["embedding_backend"] = cfg.embedding_backend
     if cfg.classifier_backend:

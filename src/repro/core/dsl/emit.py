@@ -97,6 +97,8 @@ def config_to_dict(cfg: RouterConfig) -> dict:
                            for k, v in cfg.model_profiles.items()},
         "global": {"default_model": cfg.default_model,
                    "strategy": cfg.strategy,
+                   "fuzzy": cfg.fuzzy,
+                   "fuzzy_threshold": cfg.fuzzy_threshold,
                    "embedding_backend": cfg.embedding_backend,
                    "classifier_backend": cfg.classifier_backend},
     }

@@ -100,4 +100,61 @@ def validate(prog: Program) -> List[Diagnostic]:
         if port is not None and not (0 < int(port) < 65536):
             out.append(Diagnostic(3, f"backend {b.name!r}: port {port} "
                                      "out of range", b.pos.line, b.pos.col))
+    if prog.global_:
+        thr = prog.global_.config.get("fuzzy_threshold")
+        if thr is not None and not (0.0 <= float(thr) <= 1.0):
+            out.append(Diagnostic(
+                3, f"GLOBAL fuzzy_threshold {thr} outside [0, 1]",
+                prog.global_.pos.line, prog.global_.pos.col))
     return out
+
+
+# ---------------------------------------------------------------------------
+# policy lint entrypoint:  python -m repro.core.dsl.validate <path>...
+# ---------------------------------------------------------------------------
+
+def lint_paths(paths) -> int:
+    """Lint every ``*.vsr``/``*.dsl`` policy file under the given paths.
+    Prints each diagnostic as ``file:line:col: [LEVEL] message``; returns
+    the number of FAILING files (Level-1 syntax or Level-2 unresolved
+    references — Level-3 constraints print as warnings only)."""
+    import os
+
+    from repro.core.dsl.parser import parse
+
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, fns in sorted(os.walk(p)):
+                files.extend(os.path.join(root, fn) for fn in sorted(fns)
+                             if os.path.splitext(fn)[1] in (".vsr", ".dsl"))
+        else:
+            files.append(p)
+    failed = 0
+    for path in files:
+        with open(path) as f:
+            src = f.read()
+        try:
+            prog = parse(src)
+            diags = list(prog.diagnostics) + validate(prog)
+        except Exception as e:          # lexer/parser hard failure
+            print(f"{path}:0:0: [ERROR] {e}")
+            failed += 1
+            continue
+        bad = [d for d in diags if d.level <= 2]
+        for d in diags:
+            print(f"{path}:{d.line}:{d.col}: {d}")
+        if bad:
+            failed += 1
+        else:
+            print(f"{path}: OK"
+                  + (f" ({len(diags)} constraint note(s))" if diags else ""))
+    print(f"policy lint: {len(files)} file(s), {failed} failing")
+    return failed
+
+
+if __name__ == "__main__":
+    import sys
+
+    args = sys.argv[1:] or ["examples"]
+    sys.exit(1 if lint_paths(args) else 0)

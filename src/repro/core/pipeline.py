@@ -38,9 +38,12 @@ import numpy as np
 
 from repro.core.observability import METRICS, Span, stage_scope
 from repro.core.plugins.base import PluginChain
+from repro.core.program import DecisionPlan, RouterProgram
+from repro.core.selection import select_many
 from repro.core.signals.plan import SignalPlan
 from repro.core.types import (Request, Response, RoutingOutcome,
                               SignalResult)
+from repro.classifiers.backend import DOMAIN_LABELS
 
 
 # ---------------------------------------------------------------------------
@@ -115,7 +118,9 @@ class RequestContext:
     plan: EmbeddingPlan
     root: Span
     t0: float
+    program: Optional[RouterProgram] = None  # compiled policy for this batch
     sig_plan: Optional[SignalPlan] = None   # shared fused-classifier plan
+    dec_plan: Optional[DecisionPlan] = None  # shared batch decision plan
     sig: Optional[SignalResult] = None
     decision: Any = None                    # DecisionEngine EvalResult
     outcome: Optional[RoutingOutcome] = None
@@ -146,6 +151,7 @@ def stage_signals(router, ctxs: List[RequestContext]):
     # signal plan is its classifier twin: every learned (task, text) job
     # in the batch is served by ONE fused classify_all on the classifier
     # backend (plus one batched token_classify for PII).
+    program = ctxs[0].program
     plan = ctxs[0].plan
     plan.register([c.req.latest_user_text for c in ctxs])
     # open the per-request spans BEFORE extraction so their duration
@@ -153,9 +159,10 @@ def stage_signals(router, ctxs: List[RequestContext]):
     # own measured latency)
     spans = [c.root.child("signals") for c in ctxs]
     sigs = router.signals.extract_many([c.req for c in ctxs],
-                                       router.used_types or None,
+                                       program.used_types or None,
                                        embed_fn=plan.embed,
-                                       plan=ctxs[0].sig_plan)
+                                       plan=ctxs[0].sig_plan,
+                                       signals_cfg=program.config.signals)
     for c, sig_span, sig in zip(ctxs, spans, sigs):
         c.sig = sig
         for k, m in sig.matches.items():
@@ -166,34 +173,42 @@ def stage_signals(router, ctxs: List[RequestContext]):
             if m.matched:
                 METRICS.inc("signal_matches_total", type=m.key.type)
         sig_span.finish()
+    # the DecisionPlan: project the batch's signal results onto the
+    # program's frozen vocabulary as (B, N) match/conf tensors, ready for
+    # stage_decide's single jitted gate call
+    if ctxs[0].dec_plan is not None:
+        ctxs[0].dec_plan.set_signals([c.sig for c in ctxs])
 
 
 def stage_decide(router, ctxs: List[RequestContext]):
     # shared across the batch: cache entries begun within it, so the
     # cache plugin only joins in-flight duplicates it can trust to
     # complete (a stale pending entry from a dead request is replaced)
+    program = ctxs[0].program
     pending_begun: set = set()
-    for c in ctxs:
+    dplan = ctxs[0].dec_plan
+    if dplan is not None and dplan.ready:
+        # the whole batch decides in ONE jitted gate call against the
+        # compiled program (EmbeddingPlan -> SignalPlan -> DecisionPlan)
+        results = dplan.evaluate()
+    else:
+        results = [program.engine.evaluate(c.sig) for c in ctxs]
+    for c, res in zip(ctxs, results):
         dec_span = c.root.child("decision")
-        res = router.engine.evaluate(c.sig)
         dec_span.finish(
             decision=res.decision.name if res.decision else None,
             confidence=round(res.confidence, 3))
         c.decision = res
         c.outcome = RoutingOutcome(
             decision=res.decision.name if res.decision else None,
-            model=router.config.default_model, endpoint=None,
+            model=program.config.default_model, endpoint=None,
             confidence=res.confidence, signals=c.sig)
 
-        plugins = dict(router.config.plugin_templates)
         if res.decision:
             METRICS.inc("decision_matches_total", decision=res.decision.name)
-            plugins = dict(res.decision.plugins)
-        # request-side plugins imply their response-side halves
-        if "cache" in plugins:
-            plugins.setdefault("cache_write", {"enabled": True})
-        if "memory" in plugins:
-            plugins.setdefault("memory_write", {"enabled": True})
+        # compiled per-decision plugin template (implied response-side
+        # halves already resolved at program compile time)
+        plugins = program.plugins_for(res.decision)
 
         c.plugin_ctx = {"cache": router.cache, "memory": router.memory,
                         "rag": router.rag, "halugate": router.halugate,
@@ -219,15 +234,6 @@ def stage_request_plugins(router, ctxs: List[RequestContext]):
             c.joined = True
 
 
-def stage_select(router, ctxs: List[RequestContext]):
-    for c in ctxs:
-        model, _conf = router._select(c.req, c.decision, c.sig, plan=c.plan)
-        if c.req.metadata.get("pinned_model"):
-            model = c.req.metadata["pinned_model"]   # conversation pinning
-        c.model = model
-        c.outcome.model = model
-
-
 # modality-signal label -> backend lane type (Endpoint.modality values)
 LANE_OF_LABEL = {"diffusion": "image", "both": "image", "audio": "audio",
                  "autoregressive": "text"}
@@ -245,6 +251,100 @@ def request_lane(c: RequestContext) -> str:
                 label = m.detail.get("label")
                 break
     return LANE_OF_LABEL.get(label, "text")
+
+
+def _domain_z(sig) -> int:
+    for k, m in sig.matches.items():
+        lab = m.detail.get("label") if m.detail else None
+        if k.startswith("domain:") and lab in DOMAIN_LABELS:
+            return DOMAIN_LABELS.index(lab)
+    return 0
+
+
+def _lane_serves(router, model: str, lane: str) -> bool:
+    """Topology-only lane check: does ANY endpoint (healthy or not) of a
+    compatible modality serve this model?  Health is deliberately ignored
+    — a circuit-broken endpoint is a transient condition the dispatch
+    failover owns, not a reason to unpin a conversation."""
+    return bool(router.endpoint_router.serving(model, lane,
+                                               healthy_only=False))
+
+
+def _lane_fallback(router, program, lane: str,
+                   exclude: str) -> Optional[str]:
+    """Deterministic lane-compatible substitute: profile models by
+    quality (best first), then endpoint model lists."""
+    cands = [p.name for p in sorted(program.config.model_profiles.values(),
+                                    key=lambda p: -p.quality)]
+    for ep in router.endpoint_router.endpoints:
+        cands.extend(ep.models)
+    for m in cands:
+        if m != exclude and _lane_serves(router, m, lane):
+            return m
+    return None
+
+
+def stage_select(router, ctxs: List[RequestContext]):
+    # selection runs per DECISION group, not per request: every request
+    # sharing a decision shares the compiled SelectionBinding (candidate
+    # pool + algorithm + config), so the trainable algorithms featurize
+    # and score the whole group in one vectorized select_many call.
+    program = ctxs[0].program
+    default_model = program.config.default_model
+    groups: Dict[int, List[RequestContext]] = {}
+    used_default: set = set()
+    for c in ctxs:
+        res = c.decision
+        if res.decision is None or not res.decision.model_refs:
+            c.model = default_model
+            used_default.add(id(c))
+        else:
+            groups.setdefault(program.index_of(res.decision), []).append(c)
+    for di, group in groups.items():
+        binding = program.selection[di]
+        cands = list(binding.cands)
+        if len(cands) == 1:
+            for c in group:
+                c.model = cands[0]
+        elif binding.algorithm == "remom":
+            # multi-round reasoning dispatches upstream per request
+            for c in group:
+                c.model, _ = router._select(c.req, c.decision, c.sig,
+                                            plan=c.plan)
+        else:
+            plan = group[0].plan
+            E = plan.embed([c.req.latest_user_text for c in group])
+            zs = [_domain_z(c.sig) for c in group]
+            picks = select_many(binding.algorithm, E, zs, cands,
+                                router.selection_ctx, binding.config,
+                                users=[c.req.user for c in group])
+            for c, (m, _cf) in zip(group, picks):
+                c.model = m
+    # lane validation: a pinned (or default-fallback) text model must not
+    # receive an image/audio request and die in stage_dispatch's
+    # (model, lane) grouping — pin only when lane-compatible, and swap a
+    # lane-incompatible default for a compatible model, each under a
+    # warning span.
+    for c in ctxs:
+        lane = request_lane(c)
+        pinned = c.req.metadata.get("pinned_model")
+        if pinned:
+            if _lane_serves(router, pinned, lane):
+                c.model = pinned             # conversation pinning
+            else:
+                c.root.child("select:lane_pin_override").finish(
+                    warning="pinned model lane-incompatible",
+                    pinned=pinned, lane=lane, kept=c.model)
+                METRICS.inc("lane_pin_overrides_total", lane=lane)
+        if id(c) in used_default and not _lane_serves(router, c.model, lane):
+            fb = _lane_fallback(router, program, lane, c.model)
+            if fb is not None:
+                c.root.child("select:lane_fallback").finish(
+                    warning="default model lane-incompatible",
+                    dropped=c.model, lane=lane, selected=fb)
+                METRICS.inc("lane_default_fallbacks_total", lane=lane)
+                c.model = fb
+        c.outcome.model = c.model
 
 
 def stage_dispatch(router, ctxs: List[RequestContext]):
@@ -368,23 +468,37 @@ STAGES: List[Tuple[str, Callable, bool]] = [
 
 
 def run_pipeline(router, reqs: Sequence[Request], *,
+                 program: Optional[RouterProgram] = None,
                  raise_dispatch_errors: bool = False
                  ) -> List[Tuple[Response, RoutingOutcome]]:
-    """Run N requests through the staged pipeline as one batch.
+    """Run N requests through the staged pipeline as one batch under ONE
+    compiled RouterProgram (callers group per-policy batches; a batch
+    never mixes policies, so a hot-reload mid-flight cannot change the
+    rules under a running batch).
 
     ``raise_dispatch_errors`` is set by ``route()`` to keep its raising
     contract; ``route_batch()`` instead returns a per-request error
     Response for failed dispatches, regardless of batch size."""
     if not reqs:
         return []
+    if program is None:
+        program = router.policies.get()
     plan = EmbeddingPlan(router.backend.embed)
     sig_plan = SignalPlan(router.classifier)
+    # a batch of one decides faster on the sequential Python engine than
+    # on a jitted gate dispatch + host transfer; the plan pays off from
+    # the first real batch
+    dec_plan = (DecisionPlan(program)
+                if len(reqs) > 1 and program._gate is not None and
+                getattr(router, "use_decision_plan", True) else None)
     ctxs = [RequestContext(req=r, plan=plan, sig_plan=sig_plan,
+                           dec_plan=dec_plan, program=program,
                            root=Span("request"),
                            t0=time.perf_counter()) for r in reqs]
     METRICS.inc("pipeline_batches_total")
     METRICS.observe("pipeline_batch_size", len(ctxs))
-    batch_root = Span("pipeline", attributes={"batch": len(ctxs)})
+    batch_root = Span("pipeline", attributes={"batch": len(ctxs),
+                                              "policy": program.name})
     for name, fn, on_short in STAGES:
         active = ctxs if on_short else \
             [c for c in ctxs if not (c.short or c.joined)]

@@ -1,0 +1,188 @@
+"""RouterProgram: the compiled, immutable control-plane artifact (§6).
+
+The paper's central configuration-first claim is that "fundamentally
+different scenarios are expressed as different configurations over the
+same architecture".  A :class:`RouterProgram` is what one such
+configuration compiles TO: everything the hot path needs, precomputed
+once so per-request work is table lookups and one jitted gate call.
+
+    DSL / RouterConfig  --compile-->  RouterProgram
+        * frozen signal-key vocabulary (the gate's column order)
+        * ONE jitted batch decision gate (build_decision_gate: crisp +
+          fuzzy, priority + confidence, exact tie-breaking)
+        * per-decision plugin-chain templates with the implied
+          cache_write/memory_write halves already resolved
+        * pre-bound selection bindings (candidates, algorithm, config)
+        * the sequential DecisionEngine as oracle/fallback
+
+Programs are immutable after construction: the PolicyRegistry hot-reload
+swaps the program POINTER, never mutates a live one, so in-flight
+batches finish on the program they started with.
+
+:class:`DecisionPlan` is the per-batch companion (the third plan in the
+EmbeddingPlan -> SignalPlan -> DecisionPlan series): ``stage_signals``
+fills its (B, N) match/conf tensors against the program vocabulary and
+``stage_decide`` consumes them with exactly one gate call per batch.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.decision import (DecisionEngine, EngineResult,
+                                 build_decision_gate)
+from repro.core.types import (Decision, RouterConfig, SignalKey,
+                              SignalResult)
+
+
+def _implied_halves(plugins: Dict[str, Dict[str, Any]]
+                    ) -> Dict[str, Dict[str, Any]]:
+    """Request-side plugins imply their response-side halves."""
+    out = dict(plugins)
+    if "cache" in out:
+        out.setdefault("cache_write", {"enabled": True})
+    if "memory" in out:
+        out.setdefault("memory_write", {"enabled": True})
+    return out
+
+
+class SelectionBinding:
+    """Pre-bound selection for one decision: candidate pool, weights and
+    the algorithm name/config resolved at compile time instead of per
+    request."""
+
+    __slots__ = ("cands", "weights", "algorithm", "config")
+
+    def __init__(self, decision: Decision):
+        self.cands: Tuple[str, ...] = tuple(m.name
+                                            for m in decision.model_refs)
+        self.weights: Tuple[float, ...] = tuple(m.weight
+                                                for m in decision.model_refs)
+        self.algorithm: str = decision.algorithm or "static"
+        self.config: Dict[str, Any] = dict(decision.algorithm_config)
+
+
+class RouterProgram:
+    """Immutable compiled router policy.  ``name``/``version`` identify it
+    in the PolicyRegistry; everything else is derived from ``config``."""
+
+    def __init__(self, config: RouterConfig, name: str = "default",
+                 version: int = 1):
+        self.config = config
+        self.name = name
+        self.version = version
+        self.engine = DecisionEngine(
+            config.decisions, strategy=config.strategy, fuzzy=config.fuzzy,
+            fuzzy_threshold=config.fuzzy_threshold)
+        self.used_types = config.used_signal_types()
+        self.decisions: Tuple[Decision, ...] = tuple(config.decisions)
+        self._dec_index = {id(d): i for i, d in enumerate(self.decisions)}
+        # frozen signal-key vocabulary + the jitted gate over it
+        if self.decisions:
+            self._gate, keys = build_decision_gate(
+                self.decisions, strategy=config.strategy, fuzzy=config.fuzzy,
+                fuzzy_threshold=config.fuzzy_threshold)
+        else:
+            self._gate, keys = None, []
+        self.keys: Tuple[str, ...] = tuple(keys)
+        self.key_objs: Tuple[SignalKey, ...] = tuple(
+            SignalKey(*k.split(":", 1)) for k in self.keys)
+        # per-decision plugin templates with implied halves pre-resolved
+        self.plugin_templates: Tuple[Dict[str, Dict[str, Any]], ...] = tuple(
+            _implied_halves(dict(d.plugins)) for d in self.decisions)
+        self.default_plugins: Dict[str, Dict[str, Any]] = _implied_halves(
+            dict(config.plugin_templates))
+        self.selection: Tuple[SelectionBinding, ...] = tuple(
+            SelectionBinding(d) for d in self.decisions)
+        self.gate_calls = 0            # observability: jitted calls issued
+
+    # ------------------------------------------------------------------
+    def index_of(self, decision: Decision) -> int:
+        return self._dec_index[id(decision)]
+
+    def plugins_for(self, decision: Optional[Decision]
+                    ) -> Dict[str, Dict[str, Any]]:
+        if decision is None:
+            return dict(self.default_plugins)
+        return dict(self.plugin_templates[self.index_of(decision)])
+
+    # ------------------------------------------------------------------
+    def decide_batch(self, match: np.ndarray, conf: np.ndarray
+                     ) -> List[EngineResult]:
+        """ONE jitted gate call for the whole (B, N) batch, demuxed back
+        into per-request :class:`EngineResult`\\ s identical to what the
+        sequential engine produces."""
+        self.gate_calls += 1
+        idx, c, gates, scores = self._gate(match, conf)
+        idx = np.asarray(idx)
+        c = np.asarray(c)
+        gates = np.asarray(gates)
+        scores = np.asarray(scores)
+        out: List[EngineResult] = []
+        for b in range(len(idx)):
+            i = int(idx[b])
+            matched = [(self.decisions[j].name, float(scores[b, j]))
+                       for j in range(len(self.decisions))
+                       if gates[b, j] > 0]
+            dec = self.decisions[i] if i >= 0 else None
+            out.append(EngineResult(dec, float(c[b]) if dec else 0.0,
+                                    matched))
+        return out
+
+    def signal_tensors(self, sigs: Sequence[SignalResult]
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Project a batch of SignalResults onto the frozen vocabulary:
+        (B, N) match bits and confidences in gate column order."""
+        B = len(sigs)
+        match = np.zeros((B, len(self.keys)), np.float32)
+        conf = np.zeros((B, len(self.keys)), np.float32)
+        for b, s in enumerate(sigs):
+            m, c = s.as_vector(list(self.key_objs))
+            match[b] = m
+            conf[b] = c
+        return match, conf
+
+
+class DecisionPlan:
+    """Per-batch decision work: the (B, N) tensors ``stage_signals``
+    emits against the program vocabulary, evaluated by ``stage_decide``
+    with exactly one jitted gate call (memoized)."""
+
+    def __init__(self, program: RouterProgram):
+        self.program = program
+        self.match: Optional[np.ndarray] = None
+        self.conf: Optional[np.ndarray] = None
+        self._results: Optional[List[EngineResult]] = None
+
+    @property
+    def ready(self) -> bool:
+        return self.match is not None and self.program._gate is not None
+
+    def set_signals(self, sigs: Sequence[SignalResult]):
+        self.match, self.conf = self.program.signal_tensors(sigs)
+
+    def evaluate(self) -> List[EngineResult]:
+        if self._results is None:
+            self._results = self.program.decide_batch(self.match, self.conf)
+        return self._results
+
+
+def compile_router_program(source: Union[str, RouterConfig],
+                           name: str = "default", version: int = 1
+                           ) -> RouterProgram:
+    """DSL text or an already-compiled RouterConfig -> RouterProgram.
+    DSL input is validated lint-strict: Level-1 (syntax) AND Level-2
+    (unresolved references) diagnostics raise, so a broken policy can
+    never reach the registry swap — the old program keeps serving."""
+    if isinstance(source, str):
+        from repro.core.dsl import compile_source
+        cfg, diags = compile_source(source, strict=True)
+        bad = [d for d in diags if d.level <= 2]
+        if bad:
+            raise ValueError("policy compile failed:\n" +
+                             "\n".join(str(d) for d in bad))
+    else:
+        cfg = source
+    return RouterProgram(cfg, name=name, version=version)

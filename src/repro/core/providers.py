@@ -162,15 +162,18 @@ class EndpointRouter:
         self.blacklisted_at: Dict[str, float] = {}
         self._draws = itertools.count()
 
-    def serving(self, model: str, modality: Optional[str] = None
-                ) -> List[Endpoint]:
+    def serving(self, model: str, modality: Optional[str] = None, *,
+                healthy_only: bool = True) -> List[Endpoint]:
         """Endpoints able to serve ``model`` (and, when given, the request's
         backend lane ``modality`` — endpoints with an empty modality serve
         any lane).  A circuit-broken endpoint is excluded only while its
         cooldown runs; afterwards it is re-admitted half-open for a probe
         (``mark_success`` fully restores it, another failure re-arms the
         cooldown) — without this, blacklisting was permanent: ``serving``
-        filtered the endpoint out, so ``mark_success`` could never fire."""
+        filtered the endpoint out, so ``mark_success`` could never fire.
+        ``healthy_only=False`` is the pure topology view (lane-validation
+        checks use it: a transient circuit-break is dispatch's problem,
+        not a reason to unpin a conversation)."""
         now = time.monotonic()
         eps = []
         for e in self.endpoints:
@@ -178,7 +181,7 @@ class EndpointRouter:
                 continue
             if modality and e.modality and e.modality != modality:
                 continue
-            if not self.health.get(e.name, True):
+            if healthy_only and not self.health.get(e.name, True):
                 since = now - self.blacklisted_at.get(e.name, 0.0)
                 if since < self.cooldown_s:
                     continue

@@ -22,11 +22,12 @@ import repro.core.halugate          # noqa: F401
 import repro.core.memory            # noqa: F401
 import repro.core.rag               # noqa: F401
 from repro.classifiers.backend import get_backend
-from repro.core.decision import DecisionEngine
 from repro.core.halugate import HaluGate
 from repro.core.memory import MemoryStore
-from repro.core.pipeline import EmbeddingPlan, run_pipeline
+from repro.core.pipeline import EmbeddingPlan, _domain_z, run_pipeline
 from repro.core.plugins.builtin import SemanticCache
+from repro.core.policy import PolicyRegistry
+from repro.core.program import RouterProgram
 from repro.core.providers import EndpointRouter
 from repro.core.rag import HybridRetriever, VectorStoreBackend
 from repro.core.selection import ReMoM, SelectionContext, get_algorithm
@@ -34,7 +35,6 @@ from repro.core.selection.algorithms import RoutingRecord
 from repro.core.signals import SignalEngine
 from repro.core.types import (Message, Request, Response, RouterConfig,
                               RoutingOutcome)
-from repro.classifiers.backend import DOMAIN_LABELS
 
 
 class SemanticRouter:
@@ -57,12 +57,14 @@ class SemanticRouter:
                            if config.classifier_backend else self.backend)
         self.signals = SignalEngine(config.signals, self.backend,
                                     classifier=self.classifier)
-        self.engine = DecisionEngine(config.decisions,
-                                     strategy=config.strategy)
         from repro.core.types import Endpoint
         endpoints = config.endpoints or [Endpoint("default", "vllm")]
         self.endpoint_router = EndpointRouter(endpoints)
-        self.selection_ctx = SelectionContext(profiles=config.model_profiles)
+        # copy: tenant registrations merge into the live profile table and
+        # must not mutate the default program's (immutable) config through
+        # dict aliasing
+        self.selection_ctx = SelectionContext(
+            profiles=dict(config.model_profiles))
         self.cache = SemanticCache(self.backend.embed)
         self.memory = MemoryStore(self.backend.embed)
         self.rag_store = VectorStoreBackend(self.backend.embed)
@@ -70,9 +72,45 @@ class SemanticRouter:
         self.halugate = HaluGate(self.classifier,
                                  embed_backend=self.backend)
         self.call_fn = call_fn or self._echo_call
-        self.used_types = config.used_signal_types()
+        # compiled control plane: the construction config becomes the
+        # default policy; further named policies share this substrate
+        # (backends, fleet transport, caches, endpoint router).
+        self.policies = PolicyRegistry(RouterProgram(config, name="default"),
+                                       on_register=self._bind_program)
+        # escape hatch / benchmark baseline: False forces the sequential
+        # per-request engine loop instead of the one-gate DecisionPlan
+        self.use_decision_plan = True
         self.responses_state: "OrderedDict[str, Dict[str, Any]]" = \
             OrderedDict()
+
+    # live views of the default policy's compiled program — properties so
+    # a hot-reload of "default" is reflected here, not a stale pointer
+    @property
+    def program(self) -> RouterProgram:
+        return self.policies.get()
+
+    @property
+    def engine(self):
+        """Sequential decision oracle of the current default program."""
+        return self.policies.get().engine
+
+    @property
+    def used_types(self):
+        return self.policies.get().used_types
+
+    def _bind_program(self, program: RouterProgram):
+        """Attach a (re)compiled policy to the shared substrate: exemplar
+        reference texts embed once up front, and its model profiles merge
+        into the shared selection context (last registration wins, so a
+        hot-reload that retunes a model's quality/cost actually lands)."""
+        self.signals.learned.preload(program.config.signals)
+        self.selection_ctx.profiles.update(program.config.model_profiles)
+
+    # -- policies ------------------------------------------------------------
+    def add_policy(self, name: str, dsl_text: str) -> RouterProgram:
+        """Compile + register (or hot-reload) a named policy.  Atomic:
+        in-flight batches finish on the program they started with."""
+        return self.policies.reload(name, dsl_text)
 
     # -- lifecycle -----------------------------------------------------------
     def close(self):
@@ -134,16 +172,35 @@ class SemanticRouter:
     def route(self, req: Request) -> Tuple[Response, RoutingOutcome]:
         """One request through the staged pipeline (a batch of one);
         dispatch failures raise, as the monolithic route() always did."""
-        return run_pipeline(self, [req], raise_dispatch_errors=True)[0]
+        return run_pipeline(self, [req], program=self.policies.resolve(req),
+                            raise_dispatch_errors=True)[0]
 
     def route_batch(self, reqs: Sequence[Request]
                     ) -> List[Tuple[Response, RoutingOutcome]]:
         """N requests stage-by-stage: one shared embedding plan (a single
-        ``backend.embed()`` call covers all query texts) and same-model
+        ``backend.embed()`` call covers all query texts), ONE jitted
+        decision-gate call per batch (DecisionPlan), and same-model
         upstream calls micro-batched into the fleet's batch slots.
-        Dispatch failures are isolated per request (an error Response
-        with ``finish_reason='error'``), never aborting the batch."""
-        return run_pipeline(self, list(reqs))
+        Requests resolve their policy (``metadata['policy']`` /
+        ``X-VSR-Policy``) and run as one sub-batch per compiled program;
+        each sub-batch snapshots its program pointer, so concurrent
+        hot-reloads never change rules mid-batch.  Dispatch failures are
+        isolated per request (an error Response with
+        ``finish_reason='error'``), never aborting the batch."""
+        reqs = list(reqs)
+        groups: "OrderedDict[int, Tuple[RouterProgram, List[int]]]" = \
+            OrderedDict()
+        for i, r in enumerate(reqs):
+            prog = self.policies.resolve(r)
+            groups.setdefault(id(prog), (prog, []))[1].append(i)
+        out: List[Optional[Tuple[Response, RoutingOutcome]]] = \
+            [None] * len(reqs)
+        for prog, idxs in groups.values():
+            pairs = run_pipeline(self, [reqs[i] for i in idxs],
+                                 program=prog)
+            for i, p in zip(idxs, pairs):
+                out[i] = p
+        return out
 
     # ------------------------------------------------------------------
     def _select(self, req: Request, res, sig,
@@ -156,12 +213,7 @@ class SemanticRouter:
         algo_name = res.decision.algorithm or "static"
         embed = plan.embed if plan is not None else self.backend.embed
         e_q = embed([req.latest_user_text])[0]
-        z = 0
-        for k, m in sig.matches.items():
-            lab = m.detail.get("label") if m.detail else None
-            if k.startswith("domain:") and lab in DOMAIN_LABELS:
-                z = DOMAIN_LABELS.index(lab)
-                break
+        z = _domain_z(sig)
         cfg = dict(res.decision.algorithm_config)
         cfg.setdefault("user", req.user or "anon")
         if algo_name == "remom":

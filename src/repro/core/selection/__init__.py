@@ -1,3 +1,3 @@
 from repro.core.selection.algorithms import (  # noqa: F401
-    ALGORITHMS, SelectionContext, get_algorithm)
+    ALGORITHMS, SelectionContext, get_algorithm, select_many)
 from repro.core.selection.remom import ReMoM  # noqa: F401

@@ -173,118 +173,24 @@ def _features(e_q: np.ndarray, z: int, n_domains: int = 14) -> np.ndarray:
 
 
 def select_knn(e_q, z, cands, ctx, cfg):
-    """Quality-weighted k-NN vote (Eq. 38)."""
-    k = cfg.get("k", 5)
-    recs = [r for r in ctx.records if r.model in cands]
-    if not recs:
-        return select_static(e_q, z, cands, ctx, cfg)
-    f = _features(e_q, z)
-    feats = np.stack([_features(r.embedding, r.domain) for r in recs])
-    d = np.linalg.norm(feats - f, axis=1)
-    nn = np.argsort(d)[:k]
-    votes: Dict[str, float] = {}
-    for i in nn:
-        votes[recs[i].model] = votes.get(recs[i].model, 0.0) + \
-            recs[i].quality
-    best = max(votes, key=votes.get)
-    return best, votes[best] / max(1e-9, sum(votes.values()))
+    """Quality-weighted k-NN vote (Eq. 38).  Single source of truth is
+    the batched form; this is its B=1 view."""
+    return _knn_many(np.asarray([e_q]), [z], list(cands), ctx, cfg)[0]
 
 
 def select_kmeans(e_q, z, cands, ctx, cfg):
     """Cluster assignment -> best model for the cluster (Eq. 39)."""
-    alpha = cfg.get("alpha", 0.7)
-    k = cfg.get("clusters", 4)
-    recs = [r for r in ctx.records if r.model in cands]
-    if len(recs) < k:
-        return select_static(e_q, z, cands, ctx, cfg)
-    X = np.stack([r.embedding for r in recs])
-    rng = np.random.RandomState(0)
-    cents = X[rng.choice(len(X), k, replace=False)]
-    for _ in range(10):
-        assign = np.argmin(np.linalg.norm(X[:, None] - cents[None], axis=2),
-                           axis=1)
-        for c in range(k):
-            pts = X[assign == c]
-            if len(pts):
-                cents[c] = pts.mean(0)
-    cq = int(np.argmin(np.linalg.norm(cents - e_q, axis=1)))
-    scores: Dict[str, List[float]] = {}
-    for r, a in zip(recs, assign):
-        if a == cq:
-            scores.setdefault(r.model, []).append(r.quality)
-    if not scores:
-        return select_static(e_q, z, cands, ctx, cfg)
-    def sc(m):
-        q = float(np.mean(scores[m]))
-        lat = float(np.mean(ctx.latency.get(m, [200.0]))) / 1000.0
-        return alpha * q - (1 - alpha) * lat
-    best = max(scores, key=sc)
-    return best, float(np.mean(scores[best]))
+    return _kmeans_many(np.asarray([e_q]), [z], list(cands), ctx, cfg)[0]
 
 
 def select_svm(e_q, z, cands, ctx, cfg):
     """Linear one-vs-rest SVM (Pegasos SGD) over routing records."""
-    recs = [r for r in ctx.records if r.model in cands and r.quality >= 0.5]
-    if len(recs) < 4 or len({r.model for r in recs}) < 2:
-        return select_static(e_q, z, cands, ctx, cfg)
-    models = sorted({r.model for r in recs})
-    X = np.stack([_features(r.embedding, r.domain) for r in recs])
-    lam = cfg.get("lambda", 0.01)
-    scores = {}
-    for m in models:
-        y = np.array([1.0 if r.model == m else -1.0 for r in recs])
-        w = np.zeros(X.shape[1])
-        for t in range(1, cfg.get("epochs", 20) * len(recs) + 1):
-            i = (t * 2654435761) % len(recs)
-            eta = 1.0 / (lam * t)
-            margin = y[i] * (w @ X[i])
-            w *= (1 - eta * lam)
-            if margin < 1:
-                w += eta * y[i] * X[i]
-        scores[m] = float(w @ _features(e_q, z))
-    best = max(scores, key=scores.get)
-    conf = 1.0 / (1.0 + math.exp(-scores[best]))
-    return best, conf
+    return _svm_many(np.asarray([e_q]), [z], list(cands), ctx, cfg)[0]
 
 
 def select_mlp(e_q, z, cands, ctx, cfg):
     """2-hidden-layer ReLU MLP (Eq. 40), trained in JAX on records."""
-    recs = [r for r in ctx.records if r.model in cands]
-    models = sorted({r.model for r in recs})
-    if len(recs) < 8 or len(models) < 2:
-        return select_static(e_q, z, cands, ctx, cfg)
-    import jax
-    import jax.numpy as jnp
-    X = jnp.asarray(np.stack([_features(r.embedding, r.domain)
-                              for r in recs]))
-    y = jnp.asarray([models.index(r.model) for r in recs])
-    qw = jnp.asarray([r.quality for r in recs])
-    key = jax.random.PRNGKey(0)
-    h = cfg.get("hidden", 64)
-    dims = [X.shape[1], h, h, len(models)]
-    ks = jax.random.split(key, 3)
-    params = [(jax.random.normal(ks[i], (dims[i], dims[i + 1])) * 0.1,
-               jnp.zeros(dims[i + 1])) for i in range(3)]
-
-    def fwd(p, x):
-        for w, b in p[:-1]:
-            x = jax.nn.relu(x @ w + b)
-        w, b = p[-1]
-        return x @ w + b
-
-    def loss(p):
-        logits = fwd(p, X)
-        ll = jax.nn.log_softmax(logits)
-        return -(qw * jnp.take_along_axis(ll, y[:, None], 1)[:, 0]).mean()
-
-    lr = 0.05
-    val_grad = jax.jit(jax.value_and_grad(loss))
-    for _ in range(cfg.get("steps", 60)):
-        _, g = val_grad(params)
-        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
-    probs = jax.nn.softmax(fwd(params, jnp.asarray(_features(e_q, z))[None]))
-    i = int(jnp.argmax(probs[0]))
-    return models[i], float(probs[0, i])
+    return _mlp_many(np.asarray([e_q]), [z], list(cands), ctx, cfg)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -369,6 +275,202 @@ def select_latency(e_q, z, cands, ctx, cfg):
     scores = {m: float(np.mean([per_p[p][m] for p in pcts])) for m in cands}
     best = min(scores, key=scores.get)
     return best, 1.0 / scores[best]
+
+
+# ---------------------------------------------------------------------------
+# batched selection: one matrix-form pass over the whole batch (§10, batched)
+# ---------------------------------------------------------------------------
+
+def _static_many(E_q, zs, cands, ctx, cfg):
+    # profile ranking is query-independent: compute once, replicate
+    pick = select_static(E_q[0], zs[0], cands, ctx, cfg)
+    return [pick] * len(E_q)
+
+
+def _knn_many(E_q, zs, cands, ctx, cfg):
+    """Row-batched quality-weighted k-NN: ONE (B, R) distance matrix and
+    one row-wise argsort replace B independent record scans."""
+    k = cfg.get("k", 5)
+    recs = [r for r in ctx.records if r.model in cands]
+    if not recs:
+        return _static_many(E_q, zs, cands, ctx, cfg)
+    F = np.stack([_features(E_q[i], zs[i]) for i in range(len(E_q))])
+    feats = np.stack([_features(r.embedding, r.domain) for r in recs])
+    d = np.linalg.norm(feats[None] - F[:, None], axis=2)        # (B, R)
+    nn = np.argsort(d, axis=1)[:, :k]
+    out = []
+    for row in nn:
+        votes: Dict[str, float] = {}
+        for i in row:
+            votes[recs[i].model] = votes.get(recs[i].model, 0.0) + \
+                recs[i].quality
+        best = max(votes, key=votes.get)
+        out.append((best, votes[best] / max(1e-9, sum(votes.values()))))
+    return out
+
+
+def _kmeans_many(E_q, zs, cands, ctx, cfg):
+    """Centroids/assignments depend only on the records: fit ONCE per
+    batch, then assign all B queries with one (B, k) distance matrix."""
+    alpha = cfg.get("alpha", 0.7)
+    k = cfg.get("clusters", 4)
+    recs = [r for r in ctx.records if r.model in cands]
+    if len(recs) < k:
+        return _static_many(E_q, zs, cands, ctx, cfg)
+    X = np.stack([r.embedding for r in recs])
+    rng = np.random.RandomState(0)
+    cents = X[rng.choice(len(X), k, replace=False)]
+    for _ in range(10):
+        assign = np.argmin(np.linalg.norm(X[:, None] - cents[None], axis=2),
+                           axis=1)
+        for c in range(k):
+            pts = X[assign == c]
+            if len(pts):
+                cents[c] = pts.mean(0)
+    # per-cluster model scores, computed once
+    cluster_scores: List[Dict[str, List[float]]] = [dict() for _ in range(k)]
+    for r, a in zip(recs, assign):
+        cluster_scores[a].setdefault(r.model, []).append(r.quality)
+
+    def sc(scores, m):
+        q = float(np.mean(scores[m]))
+        lat = float(np.mean(ctx.latency.get(m, [200.0]))) / 1000.0
+        return alpha * q - (1 - alpha) * lat
+
+    out = []
+    cq_all = np.argmin(np.linalg.norm(cents[None] - np.asarray(E_q)[:, None],
+                                      axis=2), axis=1)
+    for b, cq in enumerate(cq_all):
+        scores = cluster_scores[int(cq)]
+        if not scores:
+            out.append(select_static(E_q[b], zs[b], cands, ctx, cfg))
+            continue
+        best = max(scores, key=lambda m: sc(scores, m))
+        out.append((best, float(np.mean(scores[best]))))
+    return out
+
+
+def _svm_many(E_q, zs, cands, ctx, cfg):
+    """Pegasos weights depend only on the records: train each one-vs-rest
+    classifier ONCE, score the whole batch as F @ W.T."""
+    recs = [r for r in ctx.records if r.model in cands and r.quality >= 0.5]
+    if len(recs) < 4 or len({r.model for r in recs}) < 2:
+        return _static_many(E_q, zs, cands, ctx, cfg)
+    models = sorted({r.model for r in recs})
+    X = np.stack([_features(r.embedding, r.domain) for r in recs])
+    lam = cfg.get("lambda", 0.01)
+    W = []
+    for m in models:
+        y = np.array([1.0 if r.model == m else -1.0 for r in recs])
+        w = np.zeros(X.shape[1])
+        for t in range(1, cfg.get("epochs", 20) * len(recs) + 1):
+            i = (t * 2654435761) % len(recs)
+            eta = 1.0 / (lam * t)
+            margin = y[i] * (w @ X[i])
+            w *= (1 - eta * lam)
+            if margin < 1:
+                w += eta * y[i] * X[i]
+        W.append(w)
+    W = np.stack(W)                                           # (M, Feat)
+    F = np.stack([_features(E_q[i], zs[i]) for i in range(len(E_q))])
+    S = F @ W.T                                               # (B, M)
+    out = []
+    for row in S:
+        i = int(np.argmax(row))
+        out.append((models[i], 1.0 / (1.0 + math.exp(-float(row[i])))))
+    return out
+
+
+def _mlp_many(E_q, zs, cands, ctx, cfg):
+    """The 60-step JAX training loop runs ONCE per batch (it only sees
+    the records); inference is one batched forward over all B queries."""
+    recs = [r for r in ctx.records if r.model in cands]
+    models = sorted({r.model for r in recs})
+    if len(recs) < 8 or len(models) < 2:
+        return _static_many(E_q, zs, cands, ctx, cfg)
+    import jax
+    import jax.numpy as jnp
+    X = jnp.asarray(np.stack([_features(r.embedding, r.domain)
+                              for r in recs]))
+    y = jnp.asarray([models.index(r.model) for r in recs])
+    qw = jnp.asarray([r.quality for r in recs])
+    key = jax.random.PRNGKey(0)
+    h = cfg.get("hidden", 64)
+    dims = [X.shape[1], h, h, len(models)]
+    ks = jax.random.split(key, 3)
+    params = [(jax.random.normal(ks[i], (dims[i], dims[i + 1])) * 0.1,
+               jnp.zeros(dims[i + 1])) for i in range(3)]
+
+    def fwd(p, x):
+        for w, b in p[:-1]:
+            x = jax.nn.relu(x @ w + b)
+        w, b = p[-1]
+        return x @ w + b
+
+    def loss(p):
+        logits = fwd(p, X)
+        ll = jax.nn.log_softmax(logits)
+        return -(qw * jnp.take_along_axis(ll, y[:, None], 1)[:, 0]).mean()
+
+    lr = 0.05
+    val_grad = jax.jit(jax.value_and_grad(loss))
+    for _ in range(cfg.get("steps", 60)):
+        _, g = val_grad(params)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+    F = jnp.asarray(np.stack([_features(E_q[i], zs[i])
+                              for i in range(len(E_q))]))
+    probs = np.asarray(jax.nn.softmax(fwd(params, F)))
+    out = []
+    for row in probs:
+        i = int(np.argmax(row))
+        out.append((models[i], float(row[i])))
+    return out
+
+
+def _thompson_many(E_q, zs, cands, ctx, cfg):
+    # the per-model Beta draw is seeded by (model, record count) only —
+    # identical for every request in the batch, so sample once
+    pick = select_thompson(E_q[0], zs[0], cands, ctx, cfg)
+    return [pick] * len(E_q)
+
+
+_BATCHED: Dict[str, Any] = {
+    "static": _static_many,
+    "knn": _knn_many,
+    "kmeans": _kmeans_many,
+    "svm": _svm_many,
+    "mlp": _mlp_many,
+    "thompson": _thompson_many,
+}
+
+
+def select_many(name: str, E_q: np.ndarray, zs: Sequence[int],
+                cands: Sequence[str], ctx: SelectionContext,
+                cfg: Dict[str, Any],
+                users: Optional[Sequence[Optional[str]]] = None
+                ) -> List[Tuple[str, float]]:
+    """Batched selection front door: (B, dim) query embeddings + domains
+    -> one (model, conf) per row.  Algorithms with a matrix form (knn,
+    kmeans, svm, mlp, thompson, static) run ONCE over the whole batch
+    (training/featurization amortized, scores vectorized); the rest fall
+    back to per-row calls with per-request ``user`` config, preserving
+    sequential semantics exactly."""
+    B = len(E_q)
+    users = list(users) if users is not None else [None] * B
+    if name == "confidence":              # DSL alias, same as get_algorithm
+        name = "hybrid"
+    impl = _BATCHED.get(name)
+    if impl is not None and B > 1 and "user" not in cfg:
+        d = dict(cfg)
+        d.setdefault("user", users[0] or "anon")
+        return impl(np.asarray(E_q), list(zs), list(cands), ctx, d)
+    algo = get_algorithm(name)
+    out = []
+    for i in range(B):
+        d = dict(cfg)
+        d.setdefault("user", users[i] or "anon")
+        out.append(algo(E_q[i], zs[i], list(cands), ctx, d))
+    return out
 
 
 ALGORITHMS: Dict[str, Algorithm] = {

@@ -122,20 +122,26 @@ class SignalEngine:
     def extract_many(self, reqs: Sequence[Request],
                      used_types: Optional[Set[str]] = None,
                      embed_fn: Optional[Callable] = None,
-                     plan: Optional[SignalPlan] = None
+                     plan: Optional[SignalPlan] = None,
+                     signals_cfg: Optional[Dict[str, Dict[str, Dict[str,
+                                                 Any]]]] = None
                      ) -> List[SignalResult]:
         """Batched extraction: one thread-pool wave covers the learned
         signals of every request; heuristics stay inline (sub-ms).  All
         classifier jobs are pre-registered on the batch's SignalPlan
         before any evaluator runs, so the first classifying evaluator
         triggers exactly ONE fused ``classify_all`` (and PII one batched
-        ``token_classify``) for the entire batch."""
+        ``token_classify``) for the entire batch.  ``signals_cfg``
+        overrides the engine's construction-time config — this is how a
+        multi-tenant deployment runs every policy's signal set through
+        ONE engine (one thread pool, one classifier substrate)."""
         if plan is None:
             plan = SignalPlan(self.classifier)
+        cfg_map = signals_cfg if signals_cfg is not None else self.cfg
         results = [SignalResult() for _ in reqs]
         jobs = []
         for i, req in enumerate(reqs):
-            for type_, rules in self.cfg.items():
+            for type_, rules in cfg_map.items():
                 if used_types is not None and type_ not in used_types:
                     continue
                 for name, cfg in rules.items():

@@ -24,11 +24,17 @@ def _cos(a: np.ndarray, b: np.ndarray) -> np.ndarray:
 
 
 class LearnedSignals:
+    # insertion-order bound on cached exemplar embeddings: policy
+    # hot-reloads with edited exemplar sets add new content-addressed
+    # entries, so an unbounded cache would leak across a long-running
+    # --watch deployment.  Evicting a live entry only costs a re-embed.
+    MAX_REF_CACHE = 512
+
     def __init__(self, backend: ClassifierBackend,
                  classifier: Optional[ClassifierBackend] = None):
         self.backend = backend
         self.classifier = classifier or backend
-        self._ref_cache: Dict[str, np.ndarray] = {}
+        self._ref_cache: Dict[Any, np.ndarray] = {}
 
     # -- exemplar embeddings precomputed at init (paper: concurrent pool) --
     def preload(self, signals_cfg: Dict[str, Dict[str, Dict[str, Any]]]):
@@ -46,10 +52,16 @@ class LearnedSignals:
                 self._refs(f"pref:{name}:{prof}", texts)
 
     def _refs(self, key: str, texts: List[str]) -> np.ndarray:
-        if key not in self._ref_cache:
-            self._ref_cache[key] = (self.backend.embed(texts)
-                                    if texts else np.zeros((0, 1), np.float32))
-        return self._ref_cache[key]
+        # content-addressed: two POLICIES may declare the same signal name
+        # with different exemplar sets (multi-tenant registry), so the
+        # cache key includes the texts themselves, not just the name
+        ck = (key, tuple(texts))
+        if ck not in self._ref_cache:
+            self._ref_cache[ck] = (self.backend.embed(texts)
+                                   if texts else np.zeros((0, 1), np.float32))
+            while len(self._ref_cache) > self.MAX_REF_CACHE:
+                self._ref_cache.pop(next(iter(self._ref_cache)))
+        return self._ref_cache[ck]
 
     # ------------------------------------------------------------------
     def eval_embedding(self, name, cfg, req: Request, embed=None,

@@ -174,6 +174,8 @@ class RouterConfig:
     model_profiles: Dict[str, ModelProfile] = field(default_factory=dict)
     default_model: str = ""
     strategy: str = "priority"    # priority | confidence
+    fuzzy: bool = False           # Definition-6 (min, max, 1-x) evaluation
+    fuzzy_threshold: float = 0.5
     embedding_backend: str = "hash"
     classifier_backend: str = ""  # "" = same backend as embeddings
 

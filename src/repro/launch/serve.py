@@ -140,7 +140,9 @@ LANE_DEMO_REQUESTS = {
 
 def build_router(reduced: bool = True, gen_tokens: int = 8,
                  classifier_backend: str = "hash",
-                 lanes=("text",), model_axis: int = 1):
+                 lanes=("text",), model_axis: int = 1,
+                 train_adapters: bool = False,
+                 adapter_cache: str = ""):
     cfg, diags = compile_source(build_dsl(lanes))
     for d in diags:
         print(d)
@@ -148,6 +150,17 @@ def build_router(reduced: bool = True, gen_tokens: int = 8,
         # neural signals (domain/jailbreak/... + PII) classify on this
         # backend; embeddings stay on the hash reference backend
         cfg.classifier_backend = classifier_backend
+    if train_adapters and classifier_backend == "encoder":
+        # signal adapters train on synthetic task data (or load from the
+        # checkpoint cache on warm restarts) BEFORE the router observes
+        # the backend, so learned signals start on the encoder tier
+        from repro.classifiers.adapters import train_or_load_adapters
+        from repro.classifiers.backend import get_backend
+        be = get_backend("encoder")
+        report = train_or_load_adapters(be,
+                                        cache_dir=adapter_cache or None)
+        print("signal adapters: " +
+              ", ".join(f"{t}={v}" for t, v in sorted(report.items())))
     archs = sorted({p.arch for p in cfg.model_profiles.values() if p.arch})
     fleet = LocalFleet(archs, reduced=reduced, gen_tokens=gen_tokens,
                        model_axis=model_axis)
@@ -183,19 +196,55 @@ def main(argv=None):
     ap.add_argument("--model-axis", type=int, default=1,
                     help="mesh model-parallel axis size for fleet members "
                          "(shard large members across devices/hosts)")
+    ap.add_argument("--policy-dir", default="",
+                    help="directory of *.vsr policy files loaded as named "
+                         "tenant policies (name = file stem); demo "
+                         "requests cycle through them via "
+                         "metadata['policy']")
+    ap.add_argument("--watch", action="store_true",
+                    help="watch --policy-dir for edits and hot-reload "
+                         "changed policies with zero downtime (atomic "
+                         "program swap; in-flight batches finish on the "
+                         "old program)")
+    ap.add_argument("--train-adapters", action="store_true",
+                    help="train the encoder signal adapters on synthetic "
+                         "task data at startup (encoder classifier "
+                         "backend only)")
+    ap.add_argument("--adapter-cache", default=".vsr-adapters",
+                    help="checkpoint directory for trained signal "
+                         "adapters, keyed by (task, tokenizer, dims); "
+                         "warm restarts load instead of re-training")
     args = ap.parse_args(argv)
 
     lanes = tuple(l.strip() for l in args.lanes.split(",") if l.strip())
     router, fleet = build_router(gen_tokens=args.gen_tokens,
                                  classifier_backend=args.classifier_backend,
-                                 lanes=lanes, model_axis=args.model_axis)
+                                 lanes=lanes, model_axis=args.model_axis,
+                                 train_adapters=args.train_adapters,
+                                 adapter_cache=args.adapter_cache)
+    watcher = None
+    policy_names = []
+    if args.policy_dir:
+        from repro.core.policy import PolicyWatcher, load_policy_dir
+        policy_names = load_policy_dir(router.policies, args.policy_dir)
+        print(f"policies loaded: default + {', '.join(policy_names)}")
+        if args.watch:
+            watcher = PolicyWatcher(
+                router.policies, args.policy_dir,
+                on_error=lambda n, e: print(f"policy {n}: reload "
+                                            f"failed: {e}")).start()
     demo = list(DEMO_REQUESTS)
     for lane in lanes:
         demo.extend(LANE_DEMO_REQUESTS.get(lane, []))
-    reqs = [Request(messages=[Message(
-                "user", demo[i % len(demo)])],
-                user=f"user{i % 3}")
-            for i in range(args.requests)]
+    reqs = []
+    for i in range(args.requests):
+        r = Request(messages=[Message("user", demo[i % len(demo)])],
+                    user=f"user{i % 3}")
+        if policy_names:
+            # multi-tenant demo: spread requests over default + tenants
+            cycle = ["default"] + policy_names
+            r.metadata["policy"] = cycle[i % len(cycle)]
+        reqs.append(r)
     t0 = time.time()
     results = []
     if args.async_mode:
@@ -216,8 +265,10 @@ def main(argv=None):
     for i, (resp, out) in enumerate(results):
         text = demo[i % len(demo)]
         lane = resp.usage.get("vsr_lane", "text") if resp.usage else "text"
+        pol = (f" policy={reqs[i].metadata.get('policy', 'default'):10s}"
+               if policy_names else "")
         print(f"[{i:02d}] {text[:52]:54s} -> {out.decision or '-':14s} "
-              f"model={out.model:14s} lane={lane:5s} "
+              f"model={out.model:14s} lane={lane:5s}{pol} "
               f"{'FAST' if out.fast_response else 'gen '} "
               f"cache={'H' if out.cache_hit else '.'}")
     dt = time.time() - t0
@@ -235,6 +286,8 @@ def main(argv=None):
               f"calls={m.calls:3d} "
               f"tokens={m.tokens_out} prompts/drain={m.slots_per_call:.2f} "
               f"occupancy={lane.occupancy:.2f}")
+    if watcher is not None:
+        watcher.stop()
     from repro.core.observability import METRICS
     print("\nmetrics scrape (head):")
     print("\n".join(METRICS.scrape().splitlines()[:12]))

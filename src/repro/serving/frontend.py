@@ -75,6 +75,15 @@ class AsyncFrontend:
             self._q.put((req, fut))
             return fut
 
+    def reload_policy(self, name: str, dsl_text: str):
+        """Zero-downtime policy swap through the serving layer: the new
+        program compiles on the CALLER's thread and swaps atomically in
+        the router's PolicyRegistry while the driver thread keeps
+        dispatching.  Batches already in flight finish on the program
+        they resolved at batch start; every queued future completes.  A
+        compile error raises here and leaves the old policy serving."""
+        return self.router.policies.reload(name, dsl_text)
+
     def close(self, *, timeout: Optional[float] = 30.0):
         """Drain queued work and stop the driver thread."""
         with self._state_lock:

@@ -1,0 +1,390 @@
+"""Compiled RouterProgram control plane: the batched decision gate's
+full parity with the sequential engine (hypothesis sweep over random rule
+trees x {crisp, fuzzy} x {priority, confidence} incl. tie-breaks), the
+one-jitted-gate-call-per-batch contract, select_many equivalence, the
+lane-validated pinned/default model fixes, and the adapter checkpoint
+cache."""
+
+import numpy as np
+import pytest
+
+try:        # only the property sweep needs hypothesis; the rest always runs
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.decision import (DecisionEngine, and_, build_decision_gate,
+                                 leaf, not_, or_)
+from repro.core.program import RouterProgram, compile_router_program
+from repro.core.router import SemanticRouter
+from repro.core.selection import SelectionContext, get_algorithm, select_many
+from repro.core.selection.algorithms import RoutingRecord
+from repro.core.types import (Decision, Endpoint, Message, ModelProfile,
+                              ModelRef, Request, RouterConfig, SignalKey,
+                              SignalMatch, SignalResult)
+
+N_KEYS = 3
+KEYS = [SignalKey("keyword", f"s{i}") for i in range(N_KEYS)]
+
+
+def L(i):
+    return leaf("keyword", f"s{i}")
+
+
+def sig_result(bits, confs):
+    s = SignalResult()
+    for k, b, c in zip(KEYS, bits, confs):
+        s.add(SignalMatch(k, bool(b), float(c)))
+    return s
+
+
+def req(text, **kw):
+    return Request(messages=[Message("user", text)], **kw)
+
+
+# exact binary fractions: f32 and f64 evaluate the (min, max, 1-x) tree
+# and threshold comparisons identically, so parity is exact, not approx
+GRID = [i / 16.0 for i in range(17)]
+
+if HAVE_HYPOTHESIS:
+    rule_trees = st.recursive(
+        st.integers(0, N_KEYS - 1).map(L),
+        lambda kids: st.one_of(
+            st.lists(kids, min_size=2, max_size=3).map(lambda cs: and_(*cs)),
+            st.lists(kids, min_size=2, max_size=3).map(lambda cs: or_(*cs)),
+            kids.map(not_)),
+        max_leaves=6)
+
+    # -- gate == engine over random programs ------------------------------
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def test_gate_matches_engine_everywhere(data):
+        """The compiled batch gate must reproduce DecisionEngine.evaluate
+        for random rule trees under every (mode, strategy) combination —
+        including equal-priority tie-breaks (declaration order) and
+        million-scale priorities that collapsed the old float packing."""
+        strategy = data.draw(st.sampled_from(["priority", "confidence"]))
+        fuzzy = data.draw(st.booleans())
+        n_dec = data.draw(st.integers(1, 4))
+        decisions = [
+            Decision(f"d{i}", data.draw(rule_trees), [ModelRef("m")],
+                     priority=data.draw(st.sampled_from(
+                         [0, 1, 5, 5, 1_000_000, 1_000_001])))
+            for i in range(n_dec)]
+        gate, keys = build_decision_gate(decisions, strategy=strategy,
+                                         fuzzy=fuzzy, fuzzy_threshold=0.5)
+        engine = DecisionEngine(decisions, strategy=strategy, fuzzy=fuzzy,
+                                fuzzy_threshold=0.5)
+        B = 8
+        rows = [[data.draw(st.integers(0, 1)) for _ in range(N_KEYS)]
+                for _ in range(B)]
+        confs = [[data.draw(st.sampled_from(GRID)) for _ in range(N_KEYS)]
+                 for _ in range(B)]
+        kl = [str(k) for k in KEYS]
+        proj = [kl.index(k) for k in keys]
+        match = np.asarray(rows, np.float32)[:, proj]
+        conf = np.asarray(confs, np.float32)[:, proj]
+        idx, c, gates, scores = gate(match, conf)
+        names = [d.name for d in decisions]
+        for b in range(B):
+            res = engine.evaluate(sig_result(rows[b], confs[b]))
+            want = -1 if res.decision is None \
+                else names.index(res.decision.name)
+            assert int(idx[b]) == want, (strategy, fuzzy, rows[b], confs[b])
+            assert float(c[b]) == pytest.approx(res.confidence, abs=1e-6)
+            got = [(names[j], float(scores[b, j]))
+                   for j in range(n_dec) if gates[b, j] > 0]
+            assert [n for n, _ in got] == [n for n, _ in res.matched]
+            for (_, gc), (_, ec) in zip(got, res.matched):
+                assert gc == pytest.approx(ec, abs=1e-6)
+
+
+def test_gate_exact_priority_order_tiebreak():
+    """(priority=1e6, order 0) vs (priority=1e6 + 1, order 1): the old
+    ``1e6 + p*1e3 - order`` packing lost the +1 to f32 rounding; the
+    static-rank gate must keep it.  Equal priorities fall back to
+    declaration order."""
+    decisions = [
+        Decision("early", L(0), [ModelRef("m")], priority=1_000_000),
+        Decision("high", L(0), [ModelRef("m")], priority=1_000_001),
+        Decision("late", L(0), [ModelRef("m")], priority=1_000_001),
+    ]
+    gate, keys = build_decision_gate(decisions)
+    idx, _, _, _ = gate(np.ones((1, 1), np.float32),
+                        np.ones((1, 1), np.float32))
+    assert int(idx[0]) == 1                       # highest priority, first
+
+    eng = DecisionEngine(decisions)
+    s = sig_result([1, 0, 0], [1.0, 0.0, 0.0])
+    assert eng.evaluate(s).decision.name == "high"
+
+
+def test_program_plugin_templates_and_vocab():
+    cfg = RouterConfig(
+        signals={"keyword": {"kw": {"keywords": ["x"]}}},
+        decisions=[Decision("d", L(0), [ModelRef("m")],
+                            plugins={"cache": {"threshold": 0.9},
+                                     "memory": {}})],
+        default_model="m")
+    prog = RouterProgram(cfg, name="p")
+    assert prog.keys == ("keyword:s0",)
+    tpl = prog.plugins_for(cfg.decisions[0])
+    assert tpl["cache_write"] == {"enabled": True}      # implied halves
+    assert tpl["memory_write"] == {"enabled": True}
+    assert prog.selection[0].cands == ("m",)
+    # compile from DSL text too
+    prog2 = compile_router_program(
+        'SIGNAL keyword k { keywords: ["a"] }\n'
+        'ROUTE r { PRIORITY 10\n WHEN keyword("k")\n MODEL "m" }\n'
+        'GLOBAL { default_model: "m" }\n', name="t", version=3)
+    assert prog2.version == 3 and prog2.keys == ("keyword:k",)
+
+
+# -- the one-gate-call-per-batch contract -------------------------------------
+
+BATCH_CFG_SIGNALS = {
+    "keyword": {
+        "math_kw": {"operator": "any", "keywords": ["integral", "algebra"]},
+        "code_kw": {"operator": "any", "keywords": ["python", "debug"]},
+        "urgent": {"operator": "any", "keywords": ["urgent"]},
+    },
+}
+
+
+def batch_cfg():
+    return RouterConfig(
+        signals=BATCH_CFG_SIGNALS,
+        decisions=[
+            Decision("math", leaf("keyword", "math_kw"),
+                     [ModelRef("large")], priority=100),
+            Decision("code", leaf("keyword", "code_kw"),
+                     [ModelRef("mid")], priority=90),
+            Decision("urgent", and_(leaf("keyword", "urgent"),
+                                    not_(leaf("keyword", "math_kw"))),
+                     [ModelRef("fast")], priority=80),
+        ],
+        endpoints=[Endpoint("e0", "vllm")],
+        default_model="small")
+
+
+WORKLOAD = ["solve this integral with algebra",
+            "debug my python function",
+            "urgent: summarize the incident",
+            "urgent integral of x squared",
+            "tell me about the roman empire"] * 3 + ["one more question"]
+
+
+def test_route_batch_single_jitted_gate_call():
+    """A 16-request batch decides with exactly ONE jitted gate call, and
+    the decisions are identical to the sequential engine loop."""
+    router = SemanticRouter(batch_cfg())
+    program = router.program
+    calls = []
+    orig = program._gate
+
+    def spy(match, conf):
+        calls.append(np.asarray(match).shape)
+        return orig(match, conf)
+
+    program._gate = spy
+    pairs = router.route_batch([req(t) for t in WORKLOAD])
+    assert len(calls) == 1 and calls[0][0] == len(WORKLOAD)
+    assert program.gate_calls == 1
+    # sequential-engine oracle comparison on a fresh router
+    router.use_decision_plan = False
+    loop_pairs = router.route_batch([req(t) for t in WORKLOAD])
+    assert program.gate_calls == 1                  # loop mode: no gate
+    for (_, a), (_, b) in zip(pairs, loop_pairs):
+        assert a.decision == b.decision and a.model == b.model
+        assert a.confidence == pytest.approx(b.confidence, abs=1e-6)
+    router.close()
+
+
+def test_route_single_request_stays_on_engine_and_matches():
+    """A batch of one skips the gate (the sequential engine is faster
+    than a jitted dispatch at B=1) and still decides identically."""
+    r1 = SemanticRouter(batch_cfg())
+    r2 = SemanticRouter(batch_cfg())
+    r2.use_decision_plan = False
+    for t in WORKLOAD[:6]:
+        _, a = r1.route(req(t))
+        _, b = r2.route(req(t))
+        assert a.decision == b.decision and a.model == b.model
+    assert r1.program.gate_calls == 0 and r2.program.gate_calls == 0
+    r1.close()
+    r2.close()
+
+
+# -- select_many == N x sequential selection ----------------------------------
+
+def _ctx_with_records(cands, n=24, dim=8, seed=0):
+    rng = np.random.RandomState(seed)
+    ctx = SelectionContext(profiles={
+        m: ModelProfile(m, cost_per_mtok=0.1 * (i + 1),
+                        quality=0.4 + 0.2 * i)
+        for i, m in enumerate(cands)})
+    for i in range(n):
+        m = cands[i % len(cands)]
+        e = rng.randn(dim).astype(np.float32)
+        e /= np.linalg.norm(e)
+        # cluster records per model so the learned algos are decisive
+        e[i % len(cands)] += 2.0
+        ctx.add_record(RoutingRecord(e, i % 3, m,
+                                     0.9 if i % len(cands) == 0 else 0.7,
+                                     user=f"u{i % 2}"))
+        ctx.observe_latency(m, 100.0 + 50.0 * (i % len(cands)))
+        ctx.update_feedback(m, i % 2 == 0)
+    return ctx
+
+
+@pytest.mark.parametrize("algo", ["static", "knn", "kmeans", "svm", "mlp",
+                                  "thompson", "hybrid", "latency", "gmt"])
+def test_select_many_matches_sequential(algo):
+    cands = ["a", "b", "c"]
+    ctx = _ctx_with_records(cands)
+    rng = np.random.RandomState(7)
+    B = 6
+    E = rng.randn(B, 8).astype(np.float32)
+    E /= np.linalg.norm(E, axis=1, keepdims=True)
+    zs = [i % 3 for i in range(B)]
+    users = [f"u{i % 2}" for i in range(B)]
+    fn = get_algorithm(algo)
+    want = [fn(E[i], zs[i], cands, ctx, {"user": users[i] or "anon"})
+            for i in range(B)]
+    got = select_many(algo, E, zs, cands, ctx, {}, users=users)
+    assert [m for m, _ in got] == [m for m, _ in want], algo
+    for (_, gc), (_, wc) in zip(got, want):
+        assert gc == pytest.approx(wc, rel=1e-4, abs=1e-5)
+
+
+def test_stage_select_groups_by_decision(monkeypatch):
+    """Requests sharing a decision select through ONE select_many call
+    (featurization/training amortized across the group)."""
+    import repro.core.pipeline as pl
+    cfg = RouterConfig(
+        signals={"keyword": {"kw": {"keywords": ["topic"]}}},
+        decisions=[Decision("d", leaf("keyword", "kw"),
+                            [ModelRef("a"), ModelRef("b")], priority=10,
+                            algorithm="knn")],
+        endpoints=[Endpoint("e0", "vllm")],
+        model_profiles={"a": ModelProfile("a", quality=0.9),
+                        "b": ModelProfile("b", quality=0.5)},
+        default_model="a")
+    router = SemanticRouter(cfg)
+    calls = []
+    orig = pl.select_many
+
+    def spy(name, E, zs, cands, ctx, c, users=None):
+        calls.append((name, len(E)))
+        return orig(name, E, zs, cands, ctx, c, users=users)
+
+    monkeypatch.setattr(pl, "select_many", spy)
+    router.route_batch([req(f"topic question {i}") for i in range(5)])
+    assert calls == [("knn", 5)]
+    router.close()
+
+
+# -- lane-validated pinning / default fallback (satellite bugfix) -------------
+
+def lane_cfg():
+    return RouterConfig(
+        signals={"keyword": {"kw": {"keywords": ["hello"]}}},
+        decisions=[Decision("d", leaf("keyword", "kw"),
+                            [ModelRef("imodel")], priority=10)],
+        endpoints=[
+            Endpoint("etext", "vllm", models=["tmodel", "tdefault"],
+                     modality="text"),
+            Endpoint("eimg", "vllm", models=["imodel"], modality="image"),
+        ],
+        model_profiles={"tmodel": ModelProfile("tmodel", quality=0.8),
+                        "imodel": ModelProfile("imodel", quality=0.6)},
+        default_model="tdefault")
+
+
+def test_pinned_model_ignored_when_lane_incompatible():
+    """A conversation pinned to a text model must NOT swallow an image
+    request: the pin is dropped with a warning span instead of dying in
+    dispatch's (model, lane) grouping."""
+    router = SemanticRouter(lane_cfg())
+    rq = req("hello please")
+    rq.metadata["pinned_model"] = "tmodel"
+    rq.metadata["modality"] = "diffusion"          # image-lane request
+    (resp, out), = router.route_batch([rq])
+    assert out.model != "tmodel"
+    assert any(t["span"] == "select:lane_pin_override" for t in out.trace)
+    # the same pin on a text request still applies (pinning preserved)
+    rq2 = req("hello again")
+    rq2.metadata["pinned_model"] = "tmodel"
+    (_, out2), = router.route_batch([rq2])
+    assert out2.model == "tmodel"
+    assert not any(t["span"] == "select:lane_pin_override"
+                   for t in out2.trace)
+    router.close()
+
+
+def test_default_model_lane_fallback():
+    """No decision matches an image request and the default model only
+    has text endpoints: selection falls back to a lane-compatible model
+    (best profile first) under a warning span instead of dispatching a
+    text model onto the image lane."""
+    router = SemanticRouter(lane_cfg())
+    rq = req("completely unmatched request")
+    rq.metadata["modality"] = "diffusion"
+    (resp, out), = router.route_batch([rq])
+    assert out.model == "imodel"
+    assert any(t["span"] == "select:lane_fallback" for t in out.trace)
+    # text requests keep the plain default, no warning
+    (_, out2), = router.route_batch([req("another unmatched request")])
+    assert out2.model == "tdefault"
+    assert not any(t["span"] == "select:lane_fallback" for t in out2.trace)
+    router.close()
+
+
+# -- adapter checkpoint cache (satellite) -------------------------------------
+
+def test_adapter_cache_trains_once_and_loads(tmp_path, monkeypatch):
+    from repro.classifiers import adapters as A
+    from repro.classifiers.encoder import EncoderBackend
+
+    trains = []
+    orig = A.train_adapter
+
+    def counting(*a, **kw):
+        trains.append(a[3])
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(A, "train_adapter", counting)
+    be1 = EncoderBackend.small()
+    rep1 = A.train_or_load_adapters(be1, tasks=("fact_check",),
+                                    cache_dir=str(tmp_path), steps=2,
+                                    n_per_class=4)
+    assert rep1 == {"fact_check": "trained"} and trains == ["fact_check"]
+    assert "fact_check" in be1.trained
+    # warm restart: same dims + tokenizer -> loaded from the checkpoint
+    be2 = EncoderBackend.small()
+    rep2 = A.train_or_load_adapters(be2, tasks=("fact_check",),
+                                    cache_dir=str(tmp_path), steps=2,
+                                    n_per_class=4)
+    assert rep2 == {"fact_check": "loaded"} and trains == ["fact_check"]
+    for k in ("a_q", "b_q", "a_v", "b_v", "head"):
+        np.testing.assert_allclose(np.asarray(be1.adapters["fact_check"][k]),
+                                   np.asarray(be2.adapters["fact_check"][k]),
+                                   rtol=1e-6)
+    # classification actually leaves the hash tier identically
+    texts = ["what year did the war end", "write a poem about rivers"]
+    l1, p1 = be1.classify("fact_check", texts)
+    l2, p2 = be2.classify("fact_check", texts)
+    assert l1 == l2
+    np.testing.assert_allclose(p1, p2, rtol=1e-5)
+    # different dims -> different cache key -> trains again
+    be3 = EncoderBackend.small(seed=1)
+    be3_cfg = be3.cfg
+    assert A.adapter_cache_key("fact_check", be3_cfg) == \
+        A.adapter_cache_key("fact_check", be1.cfg)   # same dims, same key
+    from repro.classifiers.encoder import EncoderConfig
+    other = EncoderConfig(n_layers=2, d_model=32, n_heads=4, d_ff=64,
+                          max_len=32, lora_rank=4, embed_dim=32)
+    assert A.adapter_cache_key("fact_check", other) != \
+        A.adapter_cache_key("fact_check", be1.cfg)
