@@ -83,6 +83,7 @@ def compile_program(prog: Program) -> RouterConfig:
         cfg.fuzzy_threshold = float(g.get("fuzzy_threshold", 0.5))
         cfg.embedding_backend = str(g.get("embedding_backend", "hash"))
         cfg.classifier_backend = str(g.get("classifier_backend", ""))
+        cfg.prefix_affinity = float(g.get("prefix_affinity", 0.0))
         for mname, prof in g.get("model_profiles", {}).items():
             if isinstance(prof, dict):
                 cfg.model_profiles[mname] = ModelProfile(

@@ -130,6 +130,8 @@ def decompile(cfg: RouterConfig) -> str:
         g["embedding_backend"] = cfg.embedding_backend
     if cfg.classifier_backend:
         g["classifier_backend"] = cfg.classifier_backend
+    if cfg.prefix_affinity:
+        g["prefix_affinity"] = cfg.prefix_affinity
     if cfg.model_profiles:
         g["model_profiles"] = {
             m: {"cost_per_mtok": p.cost_per_mtok, "quality": p.quality,

@@ -284,6 +284,47 @@ def _lane_fallback(router, program, lane: str,
     return None
 
 
+def _request_prefix_hashes(c: RequestContext):
+    """Chained block hashes of the request's full message text, computed
+    once per request and cached on the context (selection and dispatch
+    both consult them)."""
+    ph = c.plugin_ctx.get("prefix_hashes")
+    if ph is None:
+        from repro.core.prefix import text_block_hashes
+        text = "\n".join(m.content for m in c.req.messages)
+        ph = c.plugin_ctx["prefix_hashes"] = text_block_hashes(text)
+    return ph
+
+
+def _apply_prefix_affinity(router, c: RequestContext, cands, w: float,
+                           conf: float):
+    """Blend the algorithm's pick with the prefix-cache affinity term:
+    ``score(m) = (1-w)*(conf if m == pick else 0) + w*depth(m)/blocks``.
+    A candidate holding enough of the conversation's cached prefix can
+    override the pick — prefilling only the suffix is usually worth more
+    than a marginal selection-score edge.  Composable with every
+    selection algorithm because it rescores AFTER the pick."""
+    hashes = _request_prefix_hashes(c)
+    if not hashes:
+        return
+    depth = router.prefix_index.match(hashes, holders=cands)
+    if not depth:
+        return
+    pick = c.model
+    nb = len(hashes)
+    best, best_s = pick, (1 - w) * conf + w * depth.get(pick, 0) / nb
+    for m in cands:
+        s = w * depth.get(m, 0) / nb + ((1 - w) * conf if m == pick else 0.0)
+        if s > best_s:
+            best, best_s = m, s
+    if best != pick:
+        METRICS.inc("prefix_affinity_overrides_total", model=best)
+        c.root.child("select:prefix_affinity").finish(
+            overridden=pick, selected=best,
+            depth=depth.get(best, 0), blocks=nb)
+        c.model = best
+
+
 def stage_select(router, ctxs: List[RequestContext]):
     # selection runs per DECISION group, not per request: every request
     # sharing a decision shares the compiled SelectionBinding (candidate
@@ -291,6 +332,7 @@ def stage_select(router, ctxs: List[RequestContext]):
     # and score the whole group in one vectorized select_many call.
     program = ctxs[0].program
     default_model = program.config.default_model
+    affinity = getattr(program.config, "prefix_affinity", 0.0)
     groups: Dict[int, List[RequestContext]] = {}
     used_default: set = set()
     for c in ctxs:
@@ -318,8 +360,10 @@ def stage_select(router, ctxs: List[RequestContext]):
             picks = select_many(binding.algorithm, E, zs, cands,
                                 router.selection_ctx, binding.config,
                                 users=[c.req.user for c in group])
-            for c, (m, _cf) in zip(group, picks):
+            for c, (m, cf) in zip(group, picks):
                 c.model = m
+                if affinity > 0:
+                    _apply_prefix_affinity(router, c, cands, affinity, cf)
     # lane validation: a pinned (or default-fallback) text model must not
     # receive an image/audio request and die in stage_dispatch's
     # (model, lane) grouping — pin only when lane-compatible, and swap a
@@ -354,11 +398,27 @@ def stage_dispatch(router, ctxs: List[RequestContext]):
     # endpoints (Endpoint.modality), so a mixed text/image/audio batch
     # forms one sub-batch per backend lane.
     groups: Dict[Tuple[str, str], List[RequestContext]] = {}
+    affinity = getattr(ctxs[0].program.config, "prefix_affinity", 0.0)
     for c in ctxs:
         groups.setdefault((c.model, request_lane(c)), []).append(c)
     for (model, lane), group in groups.items():
         spans = [c.root.child("upstream", model=model, lane=lane,
                               batched=len(group) > 1) for c in group]
+        # prefix affinity, endpoint level: prefer the endpoint whose KV
+        # pool holds the longest cached prefix of each request (holders
+        # tagged "ep:<name>" in the index); resolve() arbitrates against
+        # sticky sessions and health.
+        prefer = None
+        if affinity > 0:
+            ep_tags = {f"ep:{e.name}": e.name
+                       for e in router.endpoint_router.serving(model, lane)}
+            prefer = []
+            for c in group:
+                hashes = _request_prefix_hashes(c)
+                depth = (router.prefix_index.match(hashes, holders=ep_tags)
+                         if hashes and ep_tags else {})
+                prefer.append(
+                    ep_tags[max(depth, key=depth.get)] if depth else None)
         t0 = time.perf_counter()
         # return_errors isolates failures to the requests they belong to:
         # a poisoned request comes back as an Exception entry instead of
@@ -366,7 +426,7 @@ def stage_dispatch(router, ctxs: List[RequestContext]):
         pairs = router.endpoint_router.dispatch_many(
             [c.req for c in group], model, router.call_fn,
             sessions=[c.req.user for c in group], return_errors=True,
-            modality=lane)
+            modality=lane, prefer=prefer)
         group_ms = (time.perf_counter() - t0) * 1e3
         for c, span, out in zip(group, spans, pairs):
             if isinstance(out, Exception):
@@ -381,6 +441,14 @@ def stage_dispatch(router, ctxs: List[RequestContext]):
             resp, ep = out
             span.finish(endpoint=ep.name, provider=ep.provider)
             c.response = resp
+            if affinity > 0:
+                # the serving engine now caches this conversation's
+                # prefix blocks: future turns score toward this model
+                # and this endpoint
+                hashes = _request_prefix_hashes(c)
+                if hashes:
+                    router.prefix_index.insert(model, hashes)
+                    router.prefix_index.insert(f"ep:{ep.name}", hashes)
             # per-request service time straight from the transport when it
             # reports one (LocalFleet: scheduler submit->finish, compile
             # excluded); otherwise the group's dispatch wall clock — an

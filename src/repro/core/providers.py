@@ -16,6 +16,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core.observability import METRICS
 from repro.core.types import Endpoint, Message, Request, Response
 
 
@@ -189,10 +190,31 @@ class EndpointRouter:
         return eps
 
     def resolve(self, model: str, session: Optional[str] = None,
-                modality: Optional[str] = None) -> Optional[Endpoint]:
+                modality: Optional[str] = None,
+                prefer: Optional[str] = None) -> Optional[Endpoint]:
+        """``prefer`` names the endpoint holding the longest cached prefix
+        of this request (prefix affinity).  A healthy, serving preferred
+        endpoint wins even over the sticky-session mapping — re-prefilling
+        a cached conversation elsewhere costs more than breaking
+        stickiness — but a conflict between the two affinities is
+        recorded (``affinity_conflict_total``) so operators can see when
+        sessions migrate for cache locality."""
         eps = self.serving(model, modality)
         if not eps:
             return None
+        if prefer:
+            pref = next((e for e in eps if e.name == prefer), None)
+            if pref is not None:
+                if session:
+                    sticky = self._weighted_pick(eps, session)
+                    if sticky is not None and sticky.name != prefer:
+                        METRICS.inc("affinity_conflict_total", model=model,
+                                    endpoint=prefer)
+                return pref
+        return self._weighted_pick(eps, session)
+
+    def _weighted_pick(self, eps: List[Endpoint],
+                       session: Optional[str]) -> Optional[Endpoint]:
         weights = [max(1e-6, e.weight) for e in eps]
         total = sum(weights)
         if session:  # sticky affinity
@@ -227,7 +249,8 @@ class EndpointRouter:
 
     def _with_failover(self, model: str, session: Optional[str], attempt,
                        mark_failures: bool = True,
-                       modality: Optional[str] = None):
+                       modality: Optional[str] = None,
+                       prefer: Optional[str] = None):
         """Weighted selection + failover cascade shared by single and
         batched dispatch.  ``attempt(ep)`` performs the upstream call;
         any exception cascades to the next endpoint.  ``mark_failures``
@@ -238,7 +261,8 @@ class EndpointRouter:
         tried = set()
         last_err = None
         for _ in range(len(self.endpoints)):
-            ep = self.resolve(model, session, modality)
+            ep = self.resolve(model, session, modality,
+                              prefer=prefer if not tried else None)
             if ep is None or ep.name in tried:
                 remaining = [e for e in self.serving(model, modality)
                              if e.name not in tried]
@@ -258,23 +282,26 @@ class EndpointRouter:
 
     def dispatch(self, req: Request, model: str, call_fn,
                  session: Optional[str] = None,
-                 modality: Optional[str] = None
+                 modality: Optional[str] = None,
+                 prefer: Optional[str] = None
                  ) -> Tuple[Response, Endpoint]:
         """call_fn(endpoint, payload, headers) -> provider payload.
         Weighted selection with failover cascade to next endpoints.
-        ``modality`` restricts selection to lane-compatible endpoints."""
+        ``modality`` restricts selection to lane-compatible endpoints;
+        ``prefer`` biases the first attempt to a prefix-holding endpoint."""
         def attempt(ep):
             payload = to_provider_payload(req, ep, model)
             headers = self.auth.outbound_headers(req, ep)
             return from_provider_payload(call_fn(ep, payload, headers), ep), \
                 ep
         return self._with_failover(model, session, attempt,
-                                   modality=modality)
+                                   modality=modality, prefer=prefer)
 
     def dispatch_many(self, reqs: List[Request], model: str, call_fn,
                       sessions: Optional[List[Optional[str]]] = None,
                       return_errors: bool = False,
-                      modality: Optional[str] = None):
+                      modality: Optional[str] = None,
+                      prefer: Optional[List[Optional[str]]] = None):
         """Micro-batched dispatch: when the transport exposes a
         ``batch_call(ep, payloads, headers_list) -> payloads`` attribute,
         same-model requests sharing a sticky endpoint become ONE batched
@@ -300,25 +327,28 @@ class EndpointRouter:
         have executed before raising) can see those requests re-sent —
         same caveat as any at-least-once retry."""
         sessions = sessions or [None] * len(reqs)
+        prefer = prefer or [None] * len(reqs)
         batch_call = getattr(call_fn, "batch_call", None)
 
-        def one(r, s):
+        def one(r, s, p=None):
             try:
                 return self.dispatch(r, model, call_fn, session=s,
-                                     modality=modality)
+                                     modality=modality, prefer=p)
             except Exception as e:
                 if not return_errors:
                     raise
                 return e
 
         if batch_call is None or len(reqs) <= 1:
-            return [one(r, s) for r, s in zip(reqs, sessions)]
-        # sticky sessions pin their endpoint; sessionless requests share
-        # ONE group (a per-request resolve() draw would scatter them into
-        # tiny sub-batches and defeat micro-batching)
+            return [one(r, s, p) for r, s, p in zip(reqs, sessions, prefer)]
+        # sticky sessions and prefix-preferred endpoints pin their
+        # endpoint; the remaining (sessionless, preference-free) requests
+        # share ONE group (a per-request resolve() draw would scatter
+        # them into tiny sub-batches and defeat micro-batching)
         groups: Dict[Optional[str], List[int]] = {}
-        for i, s in enumerate(sessions):
-            ep = self.resolve(model, s, modality) if s is not None else None
+        for i, (s, p) in enumerate(zip(sessions, prefer)):
+            ep = (self.resolve(model, s, modality, prefer=p)
+                  if (s is not None or p is not None) else None)
             groups.setdefault(ep.name if ep else None, []).append(i)
         results: List[Any] = [None] * len(reqs)
         for idxs in groups.values():
@@ -338,11 +368,12 @@ class EndpointRouter:
                 pairs = self._with_failover(model, sessions[idxs[0]],
                                             attempt,
                                             mark_failures=not return_errors,
-                                            modality=modality)
+                                            modality=modality,
+                                            prefer=prefer[idxs[0]])
             except Exception:
                 if not return_errors:
                     raise
-                pairs = [one(reqs[i], sessions[i]) for i in idxs]
+                pairs = [one(reqs[i], sessions[i], prefer[i]) for i in idxs]
             for i, p in zip(idxs, pairs):
                 results[i] = p
         return results

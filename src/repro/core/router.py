@@ -65,6 +65,13 @@ class SemanticRouter:
         # dict aliasing
         self.selection_ctx = SelectionContext(
             profiles=dict(config.model_profiles))
+        # router-side optimistic prefix index: which model / endpoint most
+        # recently served each chained prompt-prefix (text-level hashes —
+        # the engine-side BlockPool owns the exact token-level truth).
+        # Consulted by stage_select/stage_dispatch when the program's
+        # ``prefix_affinity`` knob is > 0.
+        from repro.core.prefix import PrefixIndex
+        self.prefix_index = PrefixIndex()
         self.cache = SemanticCache(self.backend.embed)
         self.memory = MemoryStore(self.backend.embed)
         self.rag_store = VectorStoreBackend(self.backend.embed)

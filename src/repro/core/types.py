@@ -178,6 +178,10 @@ class RouterConfig:
     fuzzy_threshold: float = 0.5
     embedding_backend: str = "hash"
     classifier_backend: str = ""  # "" = same backend as embeddings
+    # weight of the prefix-cache affinity term in selection/dispatch:
+    # 0.0 disables it, 1.0 routes purely toward the member/endpoint
+    # holding the longest cached prefix of the conversation
+    prefix_affinity: float = 0.0
 
     def used_signal_types(self) -> set:
         from repro.core.decision import leaf_keys

@@ -1,2 +1,4 @@
-from repro.kernels.flash_decode.ops import flash_decode  # noqa: F401
-from repro.kernels.flash_decode.ref import decode_reference  # noqa: F401
+from repro.kernels.flash_decode.ops import (flash_decode,  # noqa: F401
+                                            gather_kv, paged_flash_decode)
+from repro.kernels.flash_decode.ref import (decode_reference,  # noqa: F401
+                                            paged_decode_reference)

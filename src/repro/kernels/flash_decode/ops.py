@@ -41,3 +41,39 @@ def flash_decode(q, k, v, kv_len, *, block_k: int = 128,
         q_offset=0, block_q=Gp, block_k=block_k, interpret=interpret)
     out = out[:, :G, :].reshape(B, Hkv, G, hd).reshape(B, Hq, hd)
     return out
+
+
+def gather_kv(pool, tbl):
+    """Materialize per-row contiguous KV views from a paged pool.
+
+    pool: (num_blocks, block_tokens, Hkv, hd) physical blocks;
+    tbl: (B, max_blocks) int32 block table (0 = trash block).
+    Returns (B, max_blocks * block_tokens, Hkv, hd) — each row's cache
+    laid out exactly as the contiguous path would hold it, so every
+    downstream consumer (the folded Pallas kernel, plain sdpa, the
+    reference oracle) is reused unchanged.  Positions past a row's
+    ``kv_len`` gather trash/garbage blocks and are masked by the
+    consumer, contributing exact zeros.
+    """
+    nb, blk = pool.shape[:2]
+    flat = pool.reshape((nb * blk,) + pool.shape[2:])
+    idx = tbl[:, :, None] * blk + jnp.arange(blk, dtype=jnp.int32)[None, None]
+    return flat[idx.reshape(tbl.shape[0], -1)]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def paged_flash_decode(q, kpool, vpool, tbl, kv_len, *, block_k: int = 128,
+                       interpret: bool = True):
+    """Block-table decode attention: gather each row's KV through its
+    block table, then run the folded flash-decode kernel (the gather is
+    the TPU-portable fallback for scalar-prefetch paged attention — the
+    kernel itself is unchanged, so paged and contiguous decode share one
+    code path and one numerics profile).
+
+    q: (B, Hq, hd); kpool/vpool: (num_blocks, block_tokens, Hkv, hd);
+    tbl: (B, max_blocks) int32; kv_len: (B,) int32.  Returns (B, Hq, hd).
+    """
+    k = gather_kv(kpool, tbl)
+    v = gather_kv(vpool, tbl)
+    return flash_decode(q, k, v, kv_len, block_k=block_k,
+                        interpret=interpret)

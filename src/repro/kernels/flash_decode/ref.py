@@ -25,3 +25,17 @@ def decode_reference(q, k, v, kv_len):
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", probs, v.astype(jnp.float32))
     return out.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def paged_decode_reference(q, kpool, vpool, tbl, kv_len):
+    """Oracle for block-table decode: gather per-row KV views from the
+    physical pool (kpool/vpool: (num_blocks, block_tokens, Hkv, hd);
+    tbl: (B, max_blocks) int32), then standard masked decode attention."""
+    nb, blk = kpool.shape[:2]
+
+    def gather(pool):
+        flat = pool.reshape((nb * blk,) + pool.shape[2:])
+        idx = tbl[:, :, None] * blk + jnp.arange(blk)[None, None]
+        return flat[idx.reshape(tbl.shape[0], -1)]
+
+    return decode_reference(q, gather(kpool), gather(vpool), kv_len)

@@ -134,6 +134,61 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
     return cache
 
 
+# --- paged (block) KV cache -------------------------------------------------
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Paged KV works for pure attention/MLA stacks: recurrent (SSM)
+    state is per-slot, not per-position, and cross-attention context is
+    per-request — neither pages."""
+    return (not cfg.cross_ctx_len and not cfg.encoder_groups and
+            all(s.mixer in ("attn", "mla")
+                for g in cfg.groups for s in g.period))
+
+
+def _block_paged_cache(cfg: ModelConfig, spec: BlockSpec, num_blocks: int,
+                       block_tokens: int, dtype):
+    if spec.mixer == "attn":
+        kv = (num_blocks, block_tokens, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+    if spec.mixer == "mla":
+        return {
+            "ckv": jnp.zeros((num_blocks, block_tokens, cfg.kv_lora_rank),
+                             dtype),
+            "krope": jnp.zeros((num_blocks, block_tokens, cfg.rope_head_dim),
+                               dtype),
+        }
+    raise ValueError(f"paged cache unsupported for mixer {spec.mixer!r}")
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, max_seq: int,
+                     num_blocks: int, block_tokens: int) -> dict:
+    """Paged serving cache: KV leaves are physical block pools
+    ``(repeats, num_blocks, block_tokens, ...)`` shared by every slot;
+    ``cache["tbl"]`` (slots, max_seq // block_tokens) maps each slot's
+    logical blocks to physical ones (0 = the reserved trash block).  The
+    per-slot table width equals the contiguous ``max_seq``, so a gathered
+    per-row KV view has exactly the contiguous layout — paged decode is
+    bit-identical to the contiguous path."""
+    if max_seq % block_tokens:
+        raise ValueError("max_seq must be a multiple of block_tokens")
+    dtype = _dtype(cfg)
+    cache = {"pos": jnp.zeros((slots,), jnp.int32),
+             "tbl": jnp.zeros((slots, max_seq // block_tokens), jnp.int32)}
+
+    def stack(tree, n):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), tree)
+
+    for i, g in enumerate(cfg.groups):
+        gc = {}
+        for j, spec in enumerate(g.period):
+            bc = _block_paged_cache(cfg, spec, num_blocks, block_tokens,
+                                    dtype)
+            gc[f"b{j}"] = stack(bc, g.repeats)
+        cache[f"g{i}"] = gc
+    return cache
+
+
 # ===========================================================================
 # block application
 # ===========================================================================
@@ -150,6 +205,36 @@ def _cache_write(buf: Array, val: Array, pos) -> Array:
     return jax.vmap(
         lambda b, v, p: jax.lax.dynamic_update_slice(
             b, v, (p,) + (0,) * (b.ndim - 1)))(buf, val, pos)
+
+def _paged_write(pool: Array, val: Array, tbl: Array, pos) -> Array:
+    """Scatter ``val`` (B, T, ...) into the physical block pool
+    ``(num_blocks, block_tokens, ...)`` at each row's absolute positions
+    ``pos .. pos+T`` through its block-table row ``tbl`` (B, max_blocks).
+    Positions past the table (or rows whose table maps to 0) land in the
+    reserved trash block — freed slots and pad tails write garbage
+    somewhere harmless instead of into live rows."""
+    nb, blk = pool.shape[:2]
+    B, T = val.shape[:2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    bi = positions // blk
+    phys = jnp.take_along_axis(tbl, jnp.clip(bi, 0, tbl.shape[1] - 1), axis=1)
+    phys = jnp.where(bi >= tbl.shape[1], 0, phys)
+    idx = phys * blk + positions % blk                       # (B, T) flat
+    flat = pool.reshape((nb * blk,) + pool.shape[2:])
+    flat = flat.at[idx.reshape(-1)].set(
+        val.astype(pool.dtype).reshape((B * T,) + val.shape[2:]))
+    return flat.reshape(pool.shape)
+
+
+def _paged_view(pool: Array, tbl: Array) -> Array:
+    """Gather each row's contiguous-layout KV view (B, max_blocks*blk, ...)
+    from the physical pool through its block table."""
+    nb, blk = pool.shape[:2]
+    flat = pool.reshape((nb * blk,) + pool.shape[2:])
+    idx = tbl[:, :, None] * blk + jnp.arange(blk, dtype=jnp.int32)[None, None]
+    return flat[idx.reshape(tbl.shape[0], -1)]
+
 
 def _sdpa_impl(cfg, q, k, v, **kw):
     if cfg.attn_impl == "blocked" and q.shape[1] > 1:
@@ -168,8 +253,19 @@ def _sdpa_impl(cfg, q, k, v, **kw):
     return L.sdpa(q, k, v, **kw)
 
 
-def _self_attn(cfg, p, h, rope, mode, bcache, pos, bidir=False):
-    """Self-attention in all three modes.  Returns (out, new_cache)."""
+def _self_attn(cfg, p, h, rope, mode, bcache, pos, bidir=False, tbl=None,
+               paged_fresh=False):
+    """Self-attention in all three modes.  Returns (out, new_cache).
+
+    ``tbl`` (B, max_blocks) switches the cache to the paged layout: KV
+    leaves are physical block pools and reads/writes go through each
+    row's block table.  ``paged_fresh`` marks a from-scratch paged
+    prefill (no cached prefix): attention then runs on the local K/V
+    exactly like the contiguous path — bit-identical first token — and
+    only the WRITES go through the table.  A paged suffix prefill
+    (``pos`` = per-row start offsets) instead attends over the gathered
+    view so cached prefix blocks are genuinely reused, never recomputed.
+    """
     x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
     q, k, v = L.attn_qkv(p["attn"], cfg, x, x, rope, rope)
     causal = not bidir
@@ -186,6 +282,17 @@ def _self_attn(cfg, p, h, rope, mode, bcache, pos, bidir=False):
             }
         return h + L.attn_out(p["attn"], out), new_cache
     if mode == "prefill":
+        if tbl is not None:
+            kpool = _paged_write(bcache["k"], k, tbl, pos)
+            vpool = _paged_write(bcache["v"], v, tbl, pos)
+            if paged_fresh:
+                out = _sdpa_impl(cfg, q, k, v, causal=causal,
+                                 sliding_window=cfg.sliding_window)
+            else:
+                out = L.sdpa(q, _paged_view(kpool, tbl),
+                             _paged_view(vpool, tbl), causal=causal,
+                             sliding_window=cfg.sliding_window, q_offset=pos)
+            return h + L.attn_out(p["attn"], out), {"k": kpool, "v": vpool}
         out = _sdpa_impl(cfg, q, k, v, causal=causal,
                          sliding_window=cfg.sliding_window)
         new_cache = {
@@ -196,6 +303,18 @@ def _self_attn(cfg, p, h, rope, mode, bcache, pos, bidir=False):
         }
         return h + L.attn_out(p["attn"], out), new_cache
     # decode (pos: scalar, or (B,) per-row positions for continuous batching)
+    if tbl is not None:
+        kpool = _paged_write(bcache["k"], k, tbl, pos)
+        vpool = _paged_write(bcache["v"], v, tbl, pos)
+        if cfg.decode_impl == "flash_paged":
+            from repro.kernels.flash_decode.ops import paged_flash_decode
+            out = paged_flash_decode(q[:, 0], kpool, vpool, tbl,
+                                     pos + 1)[:, None]
+        else:
+            out = L.sdpa(q, _paged_view(kpool, tbl), _paged_view(vpool, tbl),
+                         causal=False, q_offset=pos, kv_len=pos + 1,
+                         sliding_window=0)
+        return h + L.attn_out(p["attn"], out), {"k": kpool, "v": vpool}
     if cfg.decode_impl == "shardmap" and jnp.ndim(pos) == 0:
         from repro.models import smdec
         res = smdec.gqa_decode_sm(cfg, q, k, v, bcache["k"], bcache["v"],
@@ -230,7 +349,8 @@ def _cross_attn(cfg, p, h, cross_ctx, mode, bcache):
     return h + L.attn_out(p["attn"], out), new_cache
 
 
-def _mla_attn(cfg, p, h, rope, mode, bcache, pos):
+def _mla_attn(cfg, p, h, rope, mode, bcache, pos, tbl=None,
+              paged_fresh=False):
     x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
     mp = p["mla"]
     q_nope, q_rope = L.mla_q(mp, cfg, x, rope)
@@ -239,6 +359,21 @@ def _mla_attn(cfg, p, h, rope, mode, bcache, pos):
         out = _mla_naive(cfg, mp, q_nope, q_rope, c_kv, k_rope)
         return h + out, None
     if mode == "prefill":
+        if tbl is not None:
+            ckv_p = _paged_write(bcache["ckv"], c_kv, tbl, pos)
+            krope_p = _paged_write(bcache["krope"], k_rope, tbl, pos)
+            if paged_fresh:
+                out = _mla_naive(cfg, mp, q_nope, q_rope, c_kv, k_rope)
+            else:
+                # EXPANDED form over the gathered view, not the absorbed
+                # mla_attention: the absorbed path reassociates the latent
+                # matmul ((q@wk_b)·ckv vs q·(ckv@wk_b)), and that last-ulp
+                # logit difference flips greedy argmax on near-ties —
+                # paged suffix tokens must equal the contiguous path's
+                out = _mla_naive(cfg, mp, q_nope, q_rope,
+                                 _paged_view(ckv_p, tbl),
+                                 _paged_view(krope_p, tbl), q_offset=pos)
+            return h + out, {"ckv": ckv_p, "krope": krope_p}
         new_cache = {
             "ckv": jax.lax.dynamic_update_slice(
                 bcache["ckv"], c_kv.astype(bcache["ckv"].dtype), (0, pos, 0)),
@@ -250,6 +385,14 @@ def _mla_attn(cfg, p, h, rope, mode, bcache, pos):
         return h + out, new_cache
     # decode: absorbed latent attention against the compressed cache
     # (pos: scalar, or (B,) per-row positions for continuous batching)
+    if tbl is not None:
+        ckv_p = _paged_write(bcache["ckv"], c_kv, tbl, pos)
+        krope_p = _paged_write(bcache["krope"], k_rope, tbl, pos)
+        out = L.mla_attention(mp, cfg, q_nope, q_rope,
+                              _paged_view(ckv_p, tbl),
+                              _paged_view(krope_p, tbl),
+                              causal=False, q_offset=pos, kv_len=pos + 1)
+        return h + out, {"ckv": ckv_p, "krope": krope_p}
     if cfg.decode_impl == "shardmap" and jnp.ndim(pos) == 0:
         from repro.models import smdec
         B, Sq, H, _ = q_nope.shape
@@ -268,9 +411,11 @@ def _mla_attn(cfg, p, h, rope, mode, bcache, pos):
     return h + out, {"ckv": ckv, "krope": krope}
 
 
-def _mla_naive(cfg, mp, q_nope, q_rope, c_kv, k_rope):
+def _mla_naive(cfg, mp, q_nope, q_rope, c_kv, k_rope, q_offset=None):
     """Prefill/train MLA: expand latents to per-head K/V, standard SDPA
-    (compute-optimal when S is large; decode uses the absorbed path)."""
+    (compute-optimal when S is large; decode uses the absorbed path).
+    ``q_offset`` ((B,) per-row start positions) is the paged-suffix case:
+    K/V come from the gathered block view, queries sit at an offset."""
     B, Sq, H, _ = q_nope.shape
     k_nope = jnp.einsum("bsr,hrn->bshn", c_kv, mp["wk_b"])
     v = jnp.einsum("bsr,hrv->bshv", c_kv, mp["wv_b"])
@@ -278,23 +423,29 @@ def _mla_naive(cfg, mp, q_nope, q_rope, c_kv, k_rope):
                                 (B, k_rope.shape[1], H, cfg.rope_head_dim))
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     k = jnp.concatenate([k_nope, k_rope_h.astype(k_nope.dtype)], axis=-1)
-    out = _sdpa_impl(cfg, q, k, v, causal=True)
+    if q_offset is not None:
+        out = L.sdpa(q, k, v, causal=True, q_offset=q_offset)
+    else:
+        out = _sdpa_impl(cfg, q, k, v, causal=True)
     return out.reshape(B, Sq, H * cfg.v_head_dim) @ mp["wo"]
 
 
 def _apply_block(cfg: ModelConfig, spec: BlockSpec, p: dict, h: Array, *,
-                 rope, cross_ctx, mode: str, bcache, pos, moe_impl: str):
+                 rope, cross_ctx, mode: str, bcache, pos, moe_impl: str,
+                 tbl=None, paged_fresh=False):
     new_cache, aux = bcache, (jnp.zeros((), jnp.float32),) * 2
 
     if spec.mixer == "attn":
-        h, new_cache = _self_attn(cfg, p, h, rope, mode, bcache, pos)
+        h, new_cache = _self_attn(cfg, p, h, rope, mode, bcache, pos,
+                                  tbl=tbl, paged_fresh=paged_fresh)
     elif spec.mixer == "bidir_attn":
         h, new_cache = _self_attn(cfg, p, h, rope, mode, bcache, pos,
                                   bidir=True)
     elif spec.mixer == "cross_attn":
         h, new_cache = _cross_attn(cfg, p, h, cross_ctx, mode, bcache)
     elif spec.mixer == "mla":
-        h, new_cache = _mla_attn(cfg, p, h, rope, mode, bcache, pos)
+        h, new_cache = _mla_attn(cfg, p, h, rope, mode, bcache, pos,
+                                 tbl=tbl, paged_fresh=paged_fresh)
     elif spec.mixer in ("mamba", "mlstm", "slstm"):
         x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
         fwd = {"mamba": (S.mamba_forward, S.mamba_step),
@@ -329,7 +480,7 @@ def _apply_block(cfg: ModelConfig, spec: BlockSpec, p: dict, h: Array, *,
 
 def _run_groups(cfg: ModelConfig, params: dict, h: Array, groups, prefix, *,
                 rope, cross_ctx, mode, cache, pos, moe_impl, remat,
-                bidir_override=False):
+                bidir_override=False, tbl=None, paged_fresh=False):
     lb_total = jnp.zeros((), jnp.float32)
     z_total = jnp.zeros((), jnp.float32)
     new_cache = {}
@@ -349,7 +500,8 @@ def _run_groups(cfg: ModelConfig, params: dict, h: Array, groups, prefix, *,
                 bcj = bc[f"b{j}"] if bc is not None else None
                 h, ncj, (alb, az) = _apply_block(
                     cfg, spec, bp[f"b{j}"], h, rope=rope, cross_ctx=cross_ctx,
-                    mode=mode, bcache=bcj, pos=pos, moe_impl=moe_impl)
+                    mode=mode, bcache=bcj, pos=pos, moe_impl=moe_impl,
+                    tbl=tbl, paged_fresh=paged_fresh)
                 lb, z = lb + alb, z + az
                 out_cache[f"b{j}"] = ncj
             return (h, lb, z), out_cache
@@ -412,17 +564,47 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array,
 
 def prefill(cfg: ModelConfig, params: dict, tokens: Array, cache: dict,
             cross_ctx: Optional[Array] = None, *, moe_impl: str = "gshard",
-            lens: Optional[Array] = None) -> Tuple[Array, dict]:
+            lens: Optional[Array] = None, start: Optional[Array] = None,
+            tbl: Optional[Array] = None,
+            paged_fresh: bool = False) -> Tuple[Array, dict]:
     """Prefill from position 0: returns (last-token logits (B,V), cache).
 
     ``lens`` (B,) gives each row's real prompt length when rows are
     right-padded to a common width: logits are gathered at ``lens - 1``
     (each row's last REAL token) instead of the padded final position, so
-    a short row's next token is never conditioned on pad embeddings."""
+    a short row's next token is never conditioned on pad embeddings.
+
+    Paged mode (``tbl`` (B, max_blocks) given): ``cache`` is the shared
+    block-pool pytree and writes scatter through each row's block table.
+    ``start`` (B,) is the absolute position of ``tokens[:, 0]`` — for a
+    prefix-cache hit only the unmatched SUFFIX is passed in, rope phases
+    are offset by ``start`` and attention reads the cached prefix blocks
+    through the table (``paged_fresh=True`` marks a no-prefix prefill,
+    which keeps the contiguous-identical local attention path)."""
     h = params["embed"][tokens]
     h = constrain(h, "act.res")
     Sq = tokens.shape[1]
     rope_dim = cfg.rope_head_dim if cfg.is_mla else cfg.head_dim
+    if tbl is not None:
+        pos = (jnp.zeros((tokens.shape[0],), jnp.int32) if start is None
+               else jnp.asarray(start, jnp.int32))
+        positions = pos[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]
+        rope = L.rope_tables(positions, rope_dim, cfg.rope_theta)
+        h, new_cache, _ = _run_groups(
+            cfg, params, h, cfg.groups, "g", rope=rope, cross_ctx=None,
+            mode="prefill", cache=cache, pos=pos, moe_impl=moe_impl,
+            remat=False, tbl=tbl, paged_fresh=paged_fresh)
+        # pos/tbl are scheduler-owned in paged mode: carry them through
+        new_cache["pos"] = cache["pos"]
+        new_cache["tbl"] = cache["tbl"]
+        if lens is None:
+            h_last = h[:, -1:, :]
+        else:
+            idx = jnp.asarray(lens, jnp.int32) - 1
+            h_last = jnp.take_along_axis(
+                h, jnp.broadcast_to(idx[:, None, None],
+                                    (h.shape[0], 1, h.shape[2])), axis=1)
+        return _logits(cfg, params, h_last)[:, 0, :], new_cache
     rope = L.rope_tables(jnp.arange(Sq), rope_dim, cfg.rope_theta)
     cross = _prepare_cross(cfg, params, cross_ctx, moe_impl, False)
     h, new_cache, _ = _run_groups(cfg, params, h, cfg.groups, "g", rope=rope,
@@ -450,14 +632,18 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: Array, cache: dict,
     row's own depth (continuous batching: rows prefilled at different
     times decode side by side)."""
     pos = cache["pos"]
+    tbl = cache.get("tbl")          # present iff the cache is paged
     h = params["embed"][tokens]
     rope_dim = cfg.rope_head_dim if cfg.is_mla else cfg.head_dim
     rope_pos = pos[None] if jnp.ndim(pos) == 0 else pos[:, None]  # (B,1)
     rope = L.rope_tables(rope_pos, rope_dim, cfg.rope_theta)
     h, new_cache, _ = _run_groups(cfg, params, h, cfg.groups, "g", rope=rope,
                                   cross_ctx=None, mode="decode", cache=cache,
-                                  pos=pos, moe_impl=moe_impl, remat=False)
+                                  pos=pos, moe_impl=moe_impl, remat=False,
+                                  tbl=tbl)
     new_cache["pos"] = pos + 1
+    if tbl is not None:
+        new_cache["tbl"] = tbl
     logits = _logits(cfg, params, h)[:, 0, :]
     return logits, new_cache
 

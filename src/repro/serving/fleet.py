@@ -57,6 +57,7 @@ from repro.configs import get_config, get_reduced
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as MD
 from repro.serving import serve_lib
+from repro.serving.paged import PoolStats
 from repro.serving.scheduler import PREFILL_BUCKETS, DecodeScheduler
 from repro.sharding import rules as R
 from repro.sharding.ctx import sharding_rules
@@ -116,6 +117,13 @@ class FleetMember(MemberStats):
     max_seq: int
     prompt_cap: int              # longest admissible prompt
     exact_prefill: bool          # SSM state: no pad-bucketing allowed
+    # paged KV pool (prefix caching) — None/False for contiguous members
+    paged: bool = False
+    prefill_paged_fresh: object = None   # jitted no-prefix paged admission
+    prefill_paged_suffix: object = None  # jitted suffix-only paged admission
+    copy_block: object = None            # jitted COW block copy
+    block_tokens: int = 16
+    num_blocks: int = 0                  # physical blocks incl. trash block
 
 
 @dataclass
@@ -226,18 +234,46 @@ class ARLane(BackendLane):
         their decode/merge — the steady-state cost — still pre-compiles.)"""
         m, sched = self.m, self.sched
         t0 = time.perf_counter()
-        for w in dict.fromkeys(self._warmup_widths()):
-            self._warmup_submit(w)
+        widths = list(dict.fromkeys(self._warmup_widths()))
+        for wi, w in enumerate(widths):
+            # distinct fill per width: every bucket exercises the FRESH
+            # prefill path (a shared fill would prefix-match under paged
+            # KV and skip straight to the suffix program)
+            self._warmup_submit(w, fill=4 + wi)
         while self.pending:
             self.step()
+        if getattr(sched, "paged", False):
+            # re-submit the smallest bucket: a fully-cached prompt
+            # compiles the 16-wide suffix-prefill program AND the COW
+            # block copy
+            self._warmup_submit(widths[0], fill=4)
+            # partially-matched prompts (one cached block + a longer
+            # unique tail) compile the remaining suffix widths, so a
+            # cache hit on a long prompt never pays XLA compile time
+            blk = m.block_tokens
+            prev = widths[0]
+            for wi, w in enumerate(widths[1:]):
+                tail = min(prev + 1, m.prompt_cap - blk)
+                if tail <= 0:
+                    break
+                ids = np.concatenate([np.full((blk,), 4, np.int32),
+                                      np.full((tail,), 90 + wi, np.int32)])
+                self.sched.submit(ids, max_new=2)
+                prev = w
+            while self.pending:
+                self.step()
         m.warmup_ms = (time.perf_counter() - t0) * 1e3
         # warmup traffic must not pollute serving stats
         m.tokens_out = m.prompts_in = 0
         sched.admitted = sched.decode_steps = sched.slot_steps = 0
+        sched.masked_slot_steps = 0
+        sched.prefill_tokens = sched.cached_tokens = 0
+        if getattr(sched, "paged", False):
+            sched.pool.stats = PoolStats()
         sched._finished.clear()
 
-    def _warmup_submit(self, width: int):
-        self.sched.submit(np.full((width,), 4, np.int32), max_new=2)
+    def _warmup_submit(self, width: int, fill: int = 4):
+        self.sched.submit(np.full((width,), fill, np.int32), max_new=2)
 
 
 class AudioLane(ARLane):
@@ -263,8 +299,8 @@ class AudioLane(ARLane):
         # audio requests always decode from a 1-token BOS prompt
         return [1]
 
-    def _warmup_submit(self, width: int):
-        self.sched.submit(np.full((width,), 4, np.int32), max_new=2,
+    def _warmup_submit(self, width: int, fill: int = 4):
+        self.sched.submit(np.full((width,), fill, np.int32), max_new=2,
                           cross=self._frames("warmup"))
 
     def result(self, seq) -> dict:
@@ -427,7 +463,15 @@ class LocalFleet:
     def __init__(self, archs: List[str], *, reduced: bool = True,
                  batch: int = 4, max_seq: int = 160, gen_tokens: int = 16,
                  moe_impl: str = "ep", seed: int = 0, warmup: bool = True,
-                 model_axis: int = 1):
+                 model_axis: int = 1, paged: object = "auto",
+                 block_tokens: int = 16, kv_blocks: Optional[int] = None):
+        """``paged`` selects the KV layout per member: "auto" (default)
+        pages every arch the paged cache supports (pure attention/MLA
+        stacks — SSM and cross-attention members stay contiguous), True
+        requires it (raises for unsupported archs), False keeps the
+        contiguous PR-2 cache everywhere.  ``kv_blocks`` overrides the
+        physical pool size (default: one full table per slot + headroom
+        for retained prefix blocks)."""
         self.mesh = make_host_mesh(model=model_axis)
         self.model_axis = model_axis
         self.gen_tokens = gen_tokens
@@ -451,6 +495,16 @@ class LocalFleet:
                                                   **DIFFUSION_ARCHS[arch])
             else:
                 cfg = get_reduced(arch) if reduced else get_config(arch)
+                if cfg.n_experts:
+                    # serving is dropless: capacity >= the per-call token
+                    # count, so expert keep/drop never depends on which
+                    # other tokens share the dispatch group.  Capacity
+                    # drops would make a 16-wide paged suffix prefill
+                    # diverge from the same tokens inside a 64-wide
+                    # contiguous prefill (different queue population)
+                    cfg = cfg.replace(moe_capacity_factor=max(
+                        cfg.moe_capacity_factor,
+                        cfg.n_experts / max(1, cfg.moe_top_k)))
                 with sharding_rules(self.mesh,
                                     R.act_rules(self.mesh, batch)):
                     pre_row, dec, merge = serve_lib.build_row_serve_steps(
@@ -462,10 +516,34 @@ class LocalFleet:
                         out_shardings=sh["param_sharding"])(key)
                 exact = any(s.mixer in SSM_MIXERS
                             for g in cfg.groups for s in g.period)
+                can_page = (MD.paged_supported(cfg)
+                            and max_seq % block_tokens == 0)
+                if paged is True and not can_page:
+                    raise ValueError(
+                        f"{arch}: paged KV unsupported (SSM/cross-attn "
+                        f"state or max_seq % block_tokens != 0)")
+                use_paged = can_page if paged == "auto" else bool(paged)
+                pf = ps = cpb = None
+                nblk = 0
+                if use_paged:
+                    with sharding_rules(self.mesh,
+                                        R.act_rules(self.mesh, batch)):
+                        pf, ps, dec, cpb = serve_lib.build_paged_serve_steps(
+                            cfg, moe_impl=moe_impl)
+                    bpr = max_seq // block_tokens
+                    # 1 trash + a full table per slot + retained-prefix
+                    # headroom (~4 rows) for the cross-request hit rate
+                    nblk = kv_blocks or (1 + (batch + 4) * bpr)
                 member = FleetMember(arch, cfg, params, pre_row, dec, merge,
                                      batch, max_seq,
                                      prompt_cap=max_seq - gen_tokens - 1,
-                                     exact_prefill=exact)
+                                     exact_prefill=exact,
+                                     paged=use_paged,
+                                     prefill_paged_fresh=pf,
+                                     prefill_paged_suffix=ps,
+                                     copy_block=cpb,
+                                     block_tokens=block_tokens,
+                                     num_blocks=nblk)
                 lane_cls = AudioLane if cfg.family == "audio" else ARLane
                 lane = lane_cls(self, member)
                 self.schedulers[arch] = lane.sched
@@ -483,10 +561,15 @@ class LocalFleet:
         if m.cfg.cross_ctx_len:
             make_cross = lambda b, cfg=m.cfg: jnp.zeros(
                 (b, cfg.cross_ctx_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        if getattr(m, "paged", False):
+            init_cache = lambda b, cfg=m.cfg: MD.init_paged_cache(
+                cfg, m.batch, m.max_seq, m.num_blocks, m.block_tokens)
+        else:
+            init_cache = lambda b, cfg=m.cfg: MD.init_cache(
+                cfg, b, m.max_seq)
         return DecodeScheduler(
             m, gen_tokens=self.gen_tokens,
-            init_cache_fn=lambda b, cfg=m.cfg: MD.init_cache(
-                cfg, b, m.max_seq),
+            init_cache_fn=init_cache,
             make_cross_fn=make_cross)
 
     # -- generation ---------------------------------------------------------

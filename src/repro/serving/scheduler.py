@@ -25,9 +25,20 @@ Correctness notes:
   the prompt is overwritten by decode steps before it ever enters a mask.
   Architectures with recurrent (SSM) state use EXACT lengths instead —
   a padded suffix would corrupt the carried state.
-* A freed slot keeps decoding garbage until re-admission (the batch shape
-  is fixed); its outputs are discarded and its cache row is fully
-  overwritten by the next merge.
+* The decode batch shape is fixed, so a freed slot still occupies a lane
+  of the batched step — but it is MASKED out: its block-table row points
+  at the trash block (paged) / its own overwritten row (contiguous), its
+  sampled token is discarded and asserted never to reach a sequence, and
+  ``slot_steps`` counts live rows only (``masked_slot_steps`` tracks the
+  dead lanes).
+
+Paged mode (``member.paged``): the cache is a block pool
+(``model.init_paged_cache``) plus a host-side :class:`BlockPool`
+allocator.  Admission hashes the prompt into chained token blocks,
+maps every already-resident block into the new row's table (ref-counted,
+COW when a shared block must be written) and prefills ONLY the unmatched
+suffix — shared system prompts and multi-turn histories prefill once per
+prefix, not once per request.
 """
 
 from __future__ import annotations
@@ -41,6 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.observability import METRICS
+from repro.core.prefix import chain_hashes
+from repro.serving.paged import BlockPool
 
 # prompt-length buckets for admission prefill: few enough that warmup can
 # pre-compile all of them, coarse enough to amortize XLA program count.
@@ -70,6 +83,8 @@ class SequenceState:
     t_done: float = 0.0
     out: List[int] = field(default_factory=list)
     cross: Optional[object] = None  # per-request cross-attn context (1,T,d)
+    cached_tokens: int = 0          # prompt tokens served from the prefix cache
+    prefill_tokens: int = 0         # prompt tokens actually prefilled
 
     @property
     def ttft_ms(self) -> float:
@@ -102,7 +117,15 @@ class DecodeScheduler:
         self._make_cross = make_cross_fn
         self.cache = init_cache_fn(self.slots)
         self.cache["pos"] = jnp.zeros((self.slots,), jnp.int32)
-        self._row_cache0 = init_cache_fn(1)     # reusable zero batch-1 cache
+        self.paged = bool(getattr(member, "paged", False))
+        if self.paged:
+            self._row_cache0 = None         # no merge step: shared pool
+            self.pool = BlockPool(member.num_blocks, member.block_tokens)
+            self.max_blocks = member.max_seq // member.block_tokens
+            self.tbl = np.zeros((self.slots, self.max_blocks), np.int32)
+            self.row_blocks: List[Optional[List[int]]] = [None] * self.slots
+        else:
+            self._row_cache0 = init_cache_fn(1)  # reusable zero batch-1 cache
         self.pos = np.zeros((self.slots,), np.int64)
         self.last_tok = np.zeros((self.slots,), np.int32)
         self.active: List[Optional[SequenceState]] = [None] * self.slots
@@ -117,6 +140,9 @@ class DecodeScheduler:
         self.admitted = 0
         self.decode_steps = 0
         self.slot_steps = 0              # active slots summed over steps
+        self.masked_slot_steps = 0       # freed lanes masked out of decode
+        self.prefill_tokens = 0          # prompt tokens actually prefilled
+        self.cached_tokens = 0           # prompt tokens served from cache
 
     # -- public API ---------------------------------------------------------
 
@@ -168,24 +194,18 @@ class DecodeScheduler:
         m = self.m
         while self.queue and None in self.active:
             slot = self.active.index(None)
-            seq = self.queue.popleft()
-            n = len(seq.ids)
-            width = bucket_len(n, m.prompt_cap, exact=m.exact_prefill)
-            toks = np.zeros((1, width), np.int32)
-            toks[0, :min(n, width)] = seq.ids[:width]
-            lens = np.asarray([min(n, width)], np.int32)
-            args = [m.params, jnp.asarray(toks), jnp.asarray(lens),
-                    self._row_cache0]
-            if self._make_cross is not None:
-                args.append(seq.cross if seq.cross is not None
-                            else self._make_cross(1))
-            nxt, row_cache = m.prefill_row(*args)
-            self.cache = m.merge_row(self.cache, row_cache, slot)
-            first = int(np.asarray(nxt)[0])
+            seq = self.queue[0]
+            res = (self._prefill_paged(seq, slot) if self.paged
+                   else self._prefill_contiguous(seq, slot))
+            if res is None:          # block pool exhausted: retry next step
+                METRICS.inc("paged_admit_stall_total", arch=m.arch)
+                break
+            self.queue.popleft()
+            first, plen = res
             seq.slot = slot
             seq.t_first = time.perf_counter()
             seq.out.append(first)
-            self.pos[slot] = lens[0]
+            self.pos[slot] = plen
             self.last_tok[slot] = first
             self.active[slot] = seq
             self.admitted += 1
@@ -194,30 +214,134 @@ class DecodeScheduler:
             if len(seq.out) >= seq.max_new:
                 self._finish(seq, done)
 
+    def _prefill_contiguous(self, seq: SequenceState, slot: int):
+        """Single-row bucketed prefill into a fresh batch-1 cache, merged
+        into the shared contiguous cache at ``slot``."""
+        m = self.m
+        n = len(seq.ids)
+        width = bucket_len(n, m.prompt_cap, exact=m.exact_prefill)
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :min(n, width)] = seq.ids[:width]
+        lens = np.asarray([min(n, width)], np.int32)
+        args = [m.params, jnp.asarray(toks), jnp.asarray(lens),
+                self._row_cache0]
+        if self._make_cross is not None:
+            args.append(seq.cross if seq.cross is not None
+                        else self._make_cross(1))
+        nxt, row_cache = m.prefill_row(*args)
+        self.cache = m.merge_row(self.cache, row_cache, slot)
+        seq.prefill_tokens = int(lens[0])
+        self.prefill_tokens += seq.prefill_tokens
+        return int(np.asarray(nxt)[0]), int(lens[0])
+
+    def _prefill_paged(self, seq: SequenceState, slot: int):
+        """Prefix-cache-aware paged admission.
+
+        Chain-hash the prompt's full token blocks, map every resident
+        block into this row's block table (ref-counting them), COW any
+        to-be-written shared block, and prefill only the unmatched
+        suffix.  A fully-cached prompt recomputes exactly ONE token (the
+        last — its logits are needed to sample) and zero blocks.
+        Returns ``None`` (request stays queued) if the pool cannot hold
+        the row yet.
+        """
+        m = self.m
+        blk = m.block_tokens
+        ids = seq.ids = seq.ids[-m.prompt_cap:]  # keep the tail (hash_tokens)
+        n = len(ids)
+        hashes = chain_hashes(ids.tolist(), blk)
+        matched = self.pool.match(hashes)
+        start = min(matched * blk, n - 1)     # >= 1 suffix token to sample
+        suffix = n - start
+        total = max(matched, min(self.max_blocks,
+                                 -(-(n + seq.max_new + 1) // blk)))
+        row = self.pool.admit(hashes[:matched], total,
+                              new_hashes=hashes[matched:])
+        if row is None:
+            return None
+        # blocks freshly allocated for THIS row are ours to write even if
+        # eagerly hash-registered; matched blocks overlapping the write
+        # range (the fully-cached tail) must be copied first
+        fresh = set(row[matched:])
+        for src, dst in self.pool.ensure_writable(row, start // blk,
+                                                  exempt=fresh):
+            self.cache = m.copy_block(self.cache, jnp.asarray(src, jnp.int32),
+                                      jnp.asarray(dst, jnp.int32))
+        self.row_blocks[slot] = row
+        trow = np.zeros((self.max_blocks,), np.int32)
+        trow[:len(row)] = row
+        self.tbl[slot] = trow
+        width = bucket_len(suffix, m.prompt_cap, exact=False)
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :suffix] = ids[start:]
+        lens = np.asarray([suffix], np.int32)
+        starts = np.asarray([start], np.int32)
+        fn = m.prefill_paged_fresh if start == 0 else m.prefill_paged_suffix
+        nxt, self.cache = fn(m.params, jnp.asarray(toks), jnp.asarray(lens),
+                             jnp.asarray(starts), jnp.asarray(trow[None]),
+                             self.cache)
+        seq.cached_tokens = start
+        seq.prefill_tokens = suffix
+        self.cached_tokens += start
+        self.prefill_tokens += suffix
+        st = self.pool.stats
+        st.cached_tokens += start
+        st.prefill_tokens += suffix
+        return int(np.asarray(nxt)[0]), n
+
     def _decode(self, live: List[int], done: List[SequenceState]):
         m = self.m
+        dead = [i for i in range(self.slots) if self.active[i] is None]
+        # freed slots are masked out of the step: pos 0 + (paged) an
+        # all-trash table row, so their garbage KV writes land in the
+        # trash block / an overwritten row, never in a live sequence
+        assert not set(dead) & set(live)
         self.cache["pos"] = jnp.asarray(self.pos, jnp.int32)
+        if self.paged:
+            self.cache["tbl"] = jnp.asarray(self.tbl)
         toks = jnp.asarray(self.last_tok[:, None])
         nxt, self.cache = m.decode_rows(m.params, toks, self.cache)
         nxt = np.asarray(nxt)
         self.decode_steps += 1
         self.slot_steps += len(live)
+        self.masked_slot_steps += len(dead)
         self.pos[live] += 1
         for i in live:
             seq = self.active[i]
+            assert seq is not None and len(seq.out) < seq.max_new, \
+                f"slot {i}: token sampled for a freed/finished sequence"
             tok = int(nxt[i])
             seq.out.append(tok)
             self.last_tok[i] = tok
             m.tokens_out += 1
             if len(seq.out) >= seq.max_new or self.pos[i] >= self.max_seq - 1:
                 self._finish(seq, done)
+        for i in dead:
+            # no token may be sampled for a freed slot
+            assert self.active[i] is None
+            self.last_tok[i] = 0
 
     def _finish(self, seq: SequenceState, done: List[SequenceState]):
         seq.t_done = time.perf_counter()
         if seq.t_first == 0.0:
             seq.t_first = seq.t_done
+        if self.paged and seq.slot >= 0 and \
+                self.row_blocks[seq.slot] is not None:
+            # register the row's full blocks (prompt AND decoded tokens —
+            # a later turn extending this conversation re-matches them),
+            # then drop our references; unreferenced hashed blocks retire
+            # to the pool's LRU until evicted or re-matched
+            written = len(seq.ids) + max(0, len(seq.out) - 1)
+            all_ids = np.concatenate(
+                [seq.ids, np.asarray(seq.out[:-1], np.int32)])[:written]
+            self.pool.release(self.row_blocks[seq.slot],
+                              chain_hashes(all_ids.tolist(),
+                                           self.m.block_tokens))
+            self.row_blocks[seq.slot] = None
+            self.tbl[seq.slot] = 0      # point the freed lane at trash
         self.active[seq.slot] = None
         self.pos[seq.slot] = 0
+        self.last_tok[seq.slot] = 0
         done.append(seq)
 
     @property

@@ -124,3 +124,66 @@ def build_row_serve_steps(cfg: ModelConfig, *, moe_impl: str = "ep"):
 
     merge_row = jax.jit(_merge, donate_argnums=(0,))
     return prefill_row, decode, merge_row
+
+
+def make_prefill_paged_fn(cfg: ModelConfig, *, moe_impl: str = "ep",
+                          fresh: bool):
+    """Paged admission prefill: writes go through the row's block table
+    into the shared block pool, so there is no separate merge step.
+    ``fresh=True`` is the no-cached-prefix variant (attention on local
+    K/V, bit-identical to the contiguous prefill); ``fresh=False`` is the
+    suffix variant (``start`` > 0): rope offset by ``start``, attention
+    over the gathered paged view — the cached prefix is READ, never
+    recomputed."""
+    def prefill_paged(params, tokens, lens, start, tbl_row, cache):
+        logits, cache = MD.prefill(cfg, params, tokens, cache, None,
+                                   moe_impl=moe_impl, lens=lens, start=start,
+                                   tbl=tbl_row, paged_fresh=fresh)
+        return greedy(logits), cache
+    return prefill_paged
+
+
+def make_copy_block_fn():
+    """Device-side copy-on-write: duplicate physical block ``src`` into
+    ``dst`` across every KV pool leaf (axis 1 — axis 0 is the layer-group
+    repeat dim).  Compiles once; src/dst are traced scalars."""
+    def copy_block(cache, src, dst):
+        def one(leaf):
+            blk = jax.lax.dynamic_index_in_dim(leaf, src, axis=1,
+                                               keepdims=True)
+            return jax.lax.dynamic_update_slice_in_dim(leaf, blk, dst, axis=1)
+        return {k: (jax.tree.map(one, v) if k.startswith("g") else v)
+                for k, v in cache.items()}
+    return copy_block
+
+
+def build_paged_serve_steps(cfg: ModelConfig, *, moe_impl: str = "ep"):
+    """Paged continuous-batching serving steps.
+
+    Returns ``(prefill_fresh, prefill_suffix, decode, copy_block)``:
+
+    * ``prefill_fresh(params, toks (1,W), lens (1,), start (1,),
+      tbl_row (1, max_blocks), cache)`` — admission with no cached
+      prefix; identical attention math to the contiguous single-row
+      prefill (token-exact), KV writes scattered through the table.
+    * ``prefill_suffix(...)`` — same signature, ``start > 0``: only the
+      unmatched suffix is computed, the matched prefix blocks are read
+      through the table.
+    * ``decode(params, tokens (B,1), cache)`` — the shared decode step;
+      ``cache["tbl"]`` routes each row's reads/writes (freed slots map to
+      the trash block).
+    * ``copy_block(cache, src, dst)`` — COW for shared blocks.
+
+    The cache (block pool) is donated everywhere: steady state runs
+    in-place on device.
+    """
+    prefill_fresh = jax.jit(
+        make_prefill_paged_fn(cfg, moe_impl=moe_impl, fresh=True),
+        donate_argnums=(5,))
+    prefill_suffix = jax.jit(
+        make_prefill_paged_fn(cfg, moe_impl=moe_impl, fresh=False),
+        donate_argnums=(5,))
+    decode = jax.jit(make_decode_fn(cfg, moe_impl=moe_impl),
+                     donate_argnums=(2,))
+    copy_block = jax.jit(make_copy_block_fn(), donate_argnums=(0,))
+    return prefill_fresh, prefill_suffix, decode, copy_block
