@@ -2,25 +2,51 @@
 """Benchmark harness: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only t4,...]
+
+``--only`` accepts suite keys or benchmark module names
+(``t_prefix_cache`` resolves to ``prefix``, etc.).
 """
 
 import argparse
 import sys
 import traceback
 
+# module-name spellings accepted by --only alongside the short suite keys
+ALIASES = {
+    "t_decision_overhead": "decision",
+    "t_prefix_cache": "prefix",
+    "t_slo_burst": "slo",
+}
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
-    args = ap.parse_args()
 
+def _prefix_rows():
+    from benchmarks import t_prefix_cache
+    r = t_prefix_cache.run(n=8)
+    return [
+        ("prefix_cache_ttft", r["paged"]["mean_ttft_ms"] * 1e3,
+         f"speedup={r['ttft_speedup']:.2f}x "
+         f"prefill_token_reduction={r['prefill_token_reduction']:.2f}"),
+    ]
+
+
+def _slo_rows():
+    from benchmarks import t_slo_burst
+    return t_slo_burst.rows(t_slo_burst.run(burst_n=24, premium_n=4))
+
+
+def get_suites():
+    """Suite-key -> zero-arg callable returning (name, us, derived) rows.
+
+    Every module under benchmarks/ that a paper table cites must have a
+    key here — CI greps this registry against the directory listing.
+    """
     from benchmarks import (roofline_table, t4_signal_latency,
                             t5_attention_scaling, t8_lora_memory,
                             t9_scenarios, t_batch_throughput,
                             t_cache_effectiveness, t_continuous_batching,
                             t_decision_overhead, t_halugate_cost,
                             t_multimodal_fleet)
-    suites = {
+    return {
         "t4": t4_signal_latency.run,
         "t5": t5_attention_scaling.run,
         "t8": t8_lora_memory.run,
@@ -32,8 +58,24 @@ def main() -> None:
         "contbatch": t_continuous_batching.run,
         "multimodal": lambda: t_multimodal_fleet.run()[0],
         "roofline": roofline_table.run,
+        "prefix": _prefix_rows,
+        "slo": _slo_rows,
     }
-    only = set(args.only.split(",")) if args.only else None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    suites = get_suites()
+    only = None
+    if args.only:
+        only = {ALIASES.get(k, k) for k in args.only.split(",")}
+        unknown = only - suites.keys()
+        if unknown:
+            sys.exit(f"unknown suite(s): {sorted(unknown)}; "
+                     f"known: {sorted(suites) + sorted(ALIASES)}")
     print("name,us_per_call,derived")
     failures = 0
     for key, fn in suites.items():

@@ -1,0 +1,298 @@
+"""QoS under a best-effort burst: premium TTFT protection, shedding,
+degradation, and priority preemption.
+
+Two phases over one reduced arch:
+
+* **Admission burst** — a router compiled from an SLO-annotated DSL
+  policy serves a premium stream while a 10x best-effort flood arrives
+  through the async frontend.  The overload detector (fleet queue depth
+  + frontend backlog + paged-pool pressure) trips, admission sheds the
+  shed-class flood with typed ``RouterOverloadError`` responses and
+  degrades the degrade-class flood to the cheap model BEFORE signal
+  extraction, and premium requests ride scheduler preemption (SLO
+  priority 100) to the front of the decode batch.  Reported: premium
+  P50/P99 TTFT unloaded vs under burst, shed/degraded/bounced counts
+  (also asserted against the admission metrics).
+* **Scheduler preemption** — slots are filled with low-priority rows,
+  then a priority-100 arrival preempts; the victim parks its blocks in
+  the BlockPool and resumes token-exactly (checked against an
+  uninterrupted reference run), refcounts return to zero, and the
+  premium TTFT is compared against the same contention under FIFO.
+
+  PYTHONPATH=src python -m benchmarks.t_slo_burst [--smoke]
+
+Writes BENCH_slo_burst.json next to the repo root.
+"""
+
+import argparse
+import json
+import os
+import time
+
+ARCH = "smollm-360m"
+MAX_SEQ = 256
+GEN_TOKENS = 8
+BATCH = 4
+
+DSL = """
+SIGNAL keyword urgent { keywords: ["urgent"] }
+SIGNAL keyword batchjob { keywords: ["bulk"] }
+
+ROUTE premium (description = "interactive latency tier") {
+  PRIORITY 10
+  WHEN keyword("urgent")
+  MODEL "big-model"
+  SLO { class: "premium", priority: 100, ttft_ms: 500.0 }
+}
+
+ROUTE bulk_batch (description = "degrade-to-cheap throughput tier") {
+  PRIORITY 1
+  WHEN keyword("batchjob")
+  MODEL "big-model"
+  SLO { class: "batch", degrade_to: "small-model" }
+}
+
+ROUTE scavenger (description = "shed-under-overload tier") {
+  PRIORITY 1
+  WHEN NOT keyword("urgent")
+  MODEL "big-model"
+  SLO { class: "best_effort" }
+}
+
+BACKEND local vllm { address: "127.0.0.1", port: 8000,
+                     models: ["big-model", "small-model"] }
+
+GLOBAL { default_model: "big-model",
+         overload: { queue_depth: 8, shed_below: 100,
+                     retry_after_s: 0.25,
+                     default_class: "best_effort" } }
+"""
+
+
+def _pct(vals, p):
+    if not vals:
+        return 0.0
+    vals = sorted(vals)
+    return vals[min(len(vals) - 1, int(p / 100 * len(vals)))]
+
+
+def _counter_sum(metrics, prefix):
+    return sum(v for k, v in metrics.counters.items()
+               if k.split("{")[0] == prefix)
+
+
+def _build():
+    from repro.core.dsl.compiler import compile_source
+    from repro.core.router import SemanticRouter
+    from repro.serving.fleet import LocalFleet
+    from repro.serving.overload import OverloadDetector
+
+    cfg, diags = compile_source(DSL)
+    assert not [d for d in diags if d.level <= 2], diags
+    fleet = LocalFleet([ARCH], reduced=True, batch=BATCH, max_seq=MAX_SEQ,
+                       gen_tokens=GEN_TOKENS)
+    router = SemanticRouter(cfg, call_fn=fleet.call_fn(
+        {"big-model": ARCH, "small-model": ARCH}))
+    detector = OverloadDetector(interval_s=0.0)
+    detector.attach_fleet(fleet)
+    router.overload = detector
+    return router, fleet, detector
+
+
+def _premium_req(i):
+    from repro.core.types import Message, Request
+    return Request(messages=[Message(
+        "user", f"urgent interactive question number {i} needs an answer")],
+        metadata={"slo": "premium"})
+
+
+def _burst_req(i):
+    from repro.core.types import Message, Request
+    cls = "batch" if i % 2 == 0 else "best_effort"
+    word = "bulk" if cls == "batch" else "background"
+    return Request(messages=[Message(
+        "user", f"{word} offline summarization job number {i} "
+                f"over document {i}")],
+        metadata={"slo": cls})
+
+
+def run_burst(router, fleet, detector, *, burst_n, premium_n):
+    from repro.core.observability import METRICS
+    from repro.core.types import RouterOverloadError
+    from repro.serving.frontend import AsyncFrontend
+
+    fe = AsyncFrontend(router, window_ms=5.0, max_batch=8,
+                       max_depth=4 * burst_n + premium_n)
+    detector.attach_frontend(fe)
+
+    # -- unloaded premium baseline: the same concurrent premium stream
+    # as the burst phase, just with no background flood ----------------
+    fe.submit(_premium_req(999)).result()      # warm the routed path (jit)
+    base = [fe.submit(_premium_req(1000 + i)) for i in range(premium_n)]
+    base_ttfts = [float(f.result()[0].usage.get("vsr_ttft_ms", 0.0))
+                  for f in base]
+
+    shed0 = _counter_sum(METRICS, "admission_rejected_total")
+    deg0 = _counter_sum(METRICS, "admission_degraded_total")
+    pre0 = _counter_sum(METRICS, "preemptions_total")
+
+    # -- 10x best-effort flood + premium stream ------------------------
+    futs, bounced = [], 0
+    for i in range(burst_n):
+        try:
+            futs.append(("burst", fe.submit(_burst_req(i))))
+        except RouterOverloadError:
+            bounced += 1          # frontend depth bound (satellite bugfix)
+    for i in range(premium_n):
+        futs.append(("premium", fe.submit(_premium_req(i))))
+
+    prem_ttfts, sheds, degrades, prem_served = [], 0, 0, 0
+    for kind, fut in futs:
+        resp, _ = fut.result()
+        if resp.headers.get("x-vsr-error") == "overload":
+            sheds += 1
+            assert "retry-after" in resp.headers
+            continue
+        if "x-vsr-degraded" in resp.headers:
+            degrades += 1
+        if kind == "premium":
+            prem_served += 1
+            prem_ttfts.append(float(resp.usage.get("vsr_ttft_ms", 0.0)))
+    fe.close()
+
+    return {
+        "premium_baseline_p50_ms": _pct(base_ttfts, 50),
+        "premium_baseline_p99_ms": _pct(base_ttfts, 99),
+        "premium_burst_p50_ms": _pct(prem_ttfts, 50),
+        "premium_burst_p99_ms": _pct(prem_ttfts, 99),
+        "premium_served": prem_served,
+        "premium_total": premium_n,
+        "burst_requests": burst_n,
+        "sheds": sheds,
+        "degrades": degrades,
+        "bounced": bounced,
+        "sheds_metric": _counter_sum(METRICS, "admission_rejected_total")
+        - shed0,
+        "degrades_metric": _counter_sum(METRICS, "admission_degraded_total")
+        - deg0,
+        "preemptions_metric": _counter_sum(METRICS, "preemptions_total")
+        - pre0,
+        "detector_state": detector.state,
+    }
+
+
+def run_preempt(fleet, *, max_new=16):
+    """Scheduler-direct park/resume: token exactness + TTFT vs FIFO."""
+    lane = fleet.lanes[ARCH]
+    sched = lane.sched
+    victims = [f"long running background analysis over corpus {i} "
+               f"with many follow up clauses {i}" for i in range(BATCH)]
+    hot = "urgent premium question demanding an immediate first token"
+
+    # uninterrupted reference outputs (same greedy decode, same arch)
+    ref = [o["tokens"] for o in fleet.generate(ARCH, victims,
+                                               max_new=max_new)]
+
+    def contested(prio):
+        rids = [lane.submit(p, max_new=max_new, priority=0, slo="batch")
+                for p in victims]
+        for _ in range(3):          # victims underway before the VIP lands
+            lane.step()
+        t0 = time.perf_counter()
+        hi = lane.submit(hot, max_new=4, priority=prio, slo="premium")
+        ttft = None
+        finished = {}
+        while sched.pending:
+            for seq in lane.step():
+                finished[seq.rid] = seq
+                if seq.rid == hi and ttft is None:
+                    ttft = (seq.t_first - t0) * 1e3
+        return ttft, [list(finished[r].out) for r in rids]
+
+    pre0 = sched.preempted
+    fifo_ttft, fifo_outs = contested(0)          # FIFO: VIP waits for a slot
+    assert sched.preempted == pre0, "priority-0 arrival must never preempt"
+    preempt_ttft, pre_outs = contested(100)      # QoS: VIP evicts a victim
+    preempted = sched.preempted - pre0
+
+    exact = all(o == r for o, r in zip(pre_outs, ref)) and \
+        all(o == r for o, r in zip(fifo_outs, ref))
+    live = sched.pool.live_refs() if getattr(sched, "paged", False) else 0
+    return {
+        "fifo_ttft_ms": fifo_ttft,
+        "preempt_ttft_ms": preempt_ttft,
+        "preemptions": preempted,
+        "token_exact": exact,
+        "live_refs_after_drain": live,
+    }
+
+
+def run(burst_n=40, premium_n=8):
+    router, fleet, detector = _build()
+    burst = run_burst(router, fleet, detector,
+                      burst_n=burst_n, premium_n=premium_n)
+    preempt = run_preempt(fleet)
+    return {"arch": ARCH, "batch": BATCH, "gen_tokens": GEN_TOKENS,
+            "burst": burst, "preemption": preempt}
+
+
+def rows(report=None):
+    """benchmarks.run adapter: (name, us_per_call, derived) rows."""
+    r = report or run()
+    b, p = r["burst"], r["preemption"]
+    return [
+        ("slo_premium_burst_ttft", b["premium_burst_p99_ms"] * 1e3,
+         f"p50={b['premium_burst_p50_ms']:.1f}ms "
+         f"p99={b['premium_burst_p99_ms']:.1f}ms "
+         f"baseline_p99={b['premium_baseline_p99_ms']:.1f}ms "
+         f"sheds={b['sheds']} degrades={b['degrades']}"),
+        ("slo_preempt_ttft", p["preempt_ttft_ms"] * 1e3,
+         f"fifo={p['fifo_ttft_ms']:.1f}ms "
+         f"preempt={p['preempt_ttft_ms']:.1f}ms "
+         f"token_exact={p['token_exact']}"),
+    ]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI run: mechanics asserted, no P99 bound")
+    ap.add_argument("--burst", type=int, default=0)
+    args = ap.parse_args(argv)
+    burst_n = args.burst or (24 if args.smoke else 40)
+    premium_n = 4 if args.smoke else 8
+
+    report = run(burst_n=burst_n, premium_n=premium_n)
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       os.pardir, "BENCH_slo_burst.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows(report):
+        print(f"{name},{us:.1f},{derived}")
+
+    b, p = report["burst"], report["preemption"]
+    ok = (b["premium_served"] == b["premium_total"]
+          and b["sheds"] > 0 and b["degrades"] > 0
+          and b["sheds_metric"] >= b["sheds"]
+          and b["degrades_metric"] >= b["degrades"]
+          and p["token_exact"]
+          and p["live_refs_after_drain"] == 0
+          and p["preemptions"] >= 1)
+    if not args.smoke:
+        # acceptance bound: premium P99 within 2x of its unloaded baseline
+        ok = ok and (b["premium_burst_p99_ms"]
+                     <= 2.0 * max(1e-9, b["premium_baseline_p99_ms"]))
+        print(f"premium_p99 {b['premium_burst_p99_ms']:.1f}ms <= 2x "
+              f"baseline {b['premium_baseline_p99_ms']:.1f}ms: "
+              f"{b['premium_burst_p99_ms'] <= 2 * b['premium_baseline_p99_ms']}")
+    print(f"premium served {b['premium_served']}/{b['premium_total']}, "
+          f"sheds={b['sheds']} degrades={b['degrades']} "
+          f"bounced={b['bounced']} preempt_token_exact={p['token_exact']}: "
+          f"{'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

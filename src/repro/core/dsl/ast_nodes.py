@@ -72,6 +72,7 @@ class RouteDecl:
     algorithm_config: Dict[str, Any] = field(default_factory=dict)
     plugin_refs: List[str] = field(default_factory=list)
     inline_plugins: List[PluginDecl] = field(default_factory=list)
+    slo: Optional[Dict[str, Any]] = None
     pos: Pos = field(default_factory=Pos)
 
 

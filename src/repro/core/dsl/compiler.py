@@ -10,7 +10,15 @@ from repro.core.dsl.ast_nodes import (BoolAnd, BoolExpr, BoolNot, BoolOr,
 from repro.core.dsl.parser import parse
 from repro.core.dsl.validate import validate
 from repro.core.types import (Decision, Endpoint, ModelProfile, ModelRef,
-                              RouterConfig)
+                              OverloadPolicy, RouterConfig, SLOSpec)
+
+
+def _slo_spec(d: Dict[str, Any]) -> SLOSpec:
+    return SLOSpec(
+        cls=str(d.get("class", "standard")),
+        priority=int(d.get("priority", 0)),
+        ttft_ms=float(d.get("ttft_ms", 0.0)),
+        degrade_to=str(d.get("degrade_to", "")))
 
 
 def _expr_to_rule(e: BoolExpr) -> RuleNode:
@@ -55,7 +63,8 @@ def compile_program(prog: Program) -> RouterConfig:
             model_refs=refs, priority=r.priority, plugins=plugins,
             algorithm=r.algorithm or "static",
             algorithm_config=dict(r.algorithm_config),
-            description=r.description))
+            description=r.description,
+            slo=_slo_spec(r.slo) if r.slo is not None else None))
 
     for b in prog.backends:
         c = b.config
@@ -84,6 +93,16 @@ def compile_program(prog: Program) -> RouterConfig:
         cfg.embedding_backend = str(g.get("embedding_backend", "hash"))
         cfg.classifier_backend = str(g.get("classifier_backend", ""))
         cfg.prefix_affinity = float(g.get("prefix_affinity", 0.0))
+        ov = g.get("overload")
+        if isinstance(ov, dict):
+            cfg.overload = OverloadPolicy(
+                queue_depth=int(ov.get("queue_depth", 64)),
+                slot_occupancy=float(ov.get("slot_occupancy", 0.95)),
+                free_block_frac=float(ov.get("free_block_frac", 0.05)),
+                ttft_ms=float(ov.get("ttft_ms", 0.0)),
+                shed_below=int(ov.get("shed_below", 100)),
+                retry_after_s=float(ov.get("retry_after_s", 1.0)),
+                default_class=str(ov.get("default_class", "")))
         for mname, prof in g.get("model_profiles", {}).items():
             if isinstance(prof, dict):
                 cfg.model_profiles[mname] = ModelProfile(

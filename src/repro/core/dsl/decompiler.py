@@ -94,6 +94,17 @@ def decompile(cfg: RouterConfig) -> str:
             acfg = f" {_fmt_block(d.algorithm_config)}" \
                 if d.algorithm_config else ""
             lines.append(f"  ALGORITHM {d.algorithm}{acfg}")
+        if d.slo is not None:
+            s: Dict[str, Any] = {}
+            if d.slo.cls != "standard":
+                s["class"] = d.slo.cls
+            if d.slo.priority:
+                s["priority"] = d.slo.priority
+            if d.slo.ttft_ms:
+                s["ttft_ms"] = d.slo.ttft_ms
+            if d.slo.degrade_to:
+                s["degrade_to"] = d.slo.degrade_to
+            lines.append(f"  SLO {_fmt_block(s)}")
         for ptype, pcfg in d.plugins.items():
             key = (ptype, json.dumps(pcfg, sort_keys=True))
             if key in templates:
@@ -132,6 +143,24 @@ def decompile(cfg: RouterConfig) -> str:
         g["classifier_backend"] = cfg.classifier_backend
     if cfg.prefix_affinity:
         g["prefix_affinity"] = cfg.prefix_affinity
+    if cfg.overload is not None:
+        ov: Dict[str, Any] = {}
+        p = cfg.overload
+        if p.queue_depth != 64:
+            ov["queue_depth"] = p.queue_depth
+        if p.slot_occupancy != 0.95:
+            ov["slot_occupancy"] = p.slot_occupancy
+        if p.free_block_frac != 0.05:
+            ov["free_block_frac"] = p.free_block_frac
+        if p.ttft_ms:
+            ov["ttft_ms"] = p.ttft_ms
+        if p.shed_below != 100:
+            ov["shed_below"] = p.shed_below
+        if p.retry_after_s != 1.0:
+            ov["retry_after_s"] = p.retry_after_s
+        if p.default_class:
+            ov["default_class"] = p.default_class
+        g["overload"] = ov
     if cfg.model_profiles:
         g["model_profiles"] = {
             m: {"cost_per_mtok": p.cost_per_mtok, "quality": p.quality,

@@ -90,6 +90,7 @@ def config_to_dict(cfg: RouterConfig) -> dict:
             "algorithm": d.algorithm,
             "algorithm_config": d.algorithm_config,
             "plugins": d.plugins,
+            "slo": asdict(d.slo) if d.slo is not None else None,
         } for d in cfg.decisions],
         "plugin_templates": cfg.plugin_templates,
         "endpoints": [asdict(e) for e in cfg.endpoints],
@@ -100,7 +101,9 @@ def config_to_dict(cfg: RouterConfig) -> dict:
                    "fuzzy": cfg.fuzzy,
                    "fuzzy_threshold": cfg.fuzzy_threshold,
                    "embedding_backend": cfg.embedding_backend,
-                   "classifier_backend": cfg.classifier_backend},
+                   "classifier_backend": cfg.classifier_backend,
+                   "overload": asdict(cfg.overload)
+                   if cfg.overload is not None else None},
     }
 
 

@@ -23,7 +23,8 @@ TOKEN_SPEC = [
 _MASTER = re.compile("|".join(f"(?P<{n}>{p})" for n, p in TOKEN_SPEC))
 
 KEYWORDS = {"SIGNAL", "ROUTE", "PLUGIN", "BACKEND", "GLOBAL",
-            "PRIORITY", "WHEN", "MODEL", "ALGORITHM", "AND", "OR", "NOT"}
+            "PRIORITY", "WHEN", "MODEL", "ALGORITHM", "SLO",
+            "AND", "OR", "NOT"}
 
 
 @dataclass

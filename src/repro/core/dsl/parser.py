@@ -197,6 +197,9 @@ class Parser:
                 route.algorithm = self.next().value
                 if self.peek().kind == "LBRACE":
                     route.algorithm_config = self.parse_block()
+            elif self.at_keyword("SLO"):
+                self.next()
+                route.slo = self.parse_block()
             elif self.at_keyword("PLUGIN"):
                 self.next()
                 pname = self.expect("IDENT").value

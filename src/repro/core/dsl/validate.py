@@ -19,6 +19,9 @@ KNOWN_PLUGIN_TYPES = ("cache", "fast_response", "system_prompt", "headers",
 KNOWN_BACKENDS = ("vllm", "openai", "anthropic", "azure", "bedrock",
                   "gemini", "vertex", "ollama", "embedding", "cache",
                   "memory")
+SLO_KEYS = ("class", "priority", "ttft_ms", "degrade_to")
+OVERLOAD_KEYS = ("queue_depth", "slot_occupancy", "free_block_frac",
+                 "ttft_ms", "shed_below", "retry_after_s", "default_class")
 
 
 def _refs(expr):
@@ -84,6 +87,22 @@ def validate(prog: Program) -> List[Diagnostic]:
         if not r.models:
             out.append(Diagnostic(3, f"route {r.name!r}: no MODEL declared",
                                   r.pos.line, r.pos.col))
+        if r.slo is not None:
+            for key in r.slo:
+                if key not in SLO_KEYS:
+                    sugg = difflib.get_close_matches(key, SLO_KEYS, n=1)
+                    out.append(Diagnostic(
+                        3, f"route {r.name!r}: unknown SLO key {key!r}",
+                        r.pos.line, r.pos.col,
+                        quickfix=sugg[0] if sugg else None))
+            if int(r.slo.get("priority", 0)) < 0:
+                out.append(Diagnostic(
+                    3, f"route {r.name!r}: negative SLO priority",
+                    r.pos.line, r.pos.col))
+            if float(r.slo.get("ttft_ms", 0.0)) < 0:
+                out.append(Diagnostic(
+                    3, f"route {r.name!r}: negative SLO ttft_ms",
+                    r.pos.line, r.pos.col))
     for p in prog.plugins:
         if p.type not in KNOWN_PLUGIN_TYPES:
             sugg = difflib.get_close_matches(p.type, KNOWN_PLUGIN_TYPES, n=1)
@@ -106,6 +125,21 @@ def validate(prog: Program) -> List[Diagnostic]:
             out.append(Diagnostic(
                 3, f"GLOBAL fuzzy_threshold {thr} outside [0, 1]",
                 prog.global_.pos.line, prog.global_.pos.col))
+        ov = prog.global_.config.get("overload")
+        if isinstance(ov, dict):
+            for key in ov:
+                if key not in OVERLOAD_KEYS:
+                    sugg = difflib.get_close_matches(key, OVERLOAD_KEYS, n=1)
+                    out.append(Diagnostic(
+                        3, f"GLOBAL overload: unknown key {key!r}",
+                        prog.global_.pos.line, prog.global_.pos.col,
+                        quickfix=sugg[0] if sugg else None))
+            for frac_key in ("slot_occupancy", "free_block_frac"):
+                v = ov.get(frac_key)
+                if v is not None and not (0.0 <= float(v) <= 1.0):
+                    out.append(Diagnostic(
+                        3, f"GLOBAL overload: {frac_key} {v} outside [0, 1]",
+                        prog.global_.pos.line, prog.global_.pos.col))
     return out
 
 

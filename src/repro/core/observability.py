@@ -21,6 +21,7 @@ class Metrics:
         self._lock = threading.Lock()
         self.counters: Dict[str, float] = defaultdict(float)
         self.hists: Dict[str, List[float]] = defaultdict(list)
+        self.gauges: Dict[str, float] = {}
 
     def inc(self, name: str, value: float = 1.0, **labels):
         with self._lock:
@@ -29,6 +30,11 @@ class Metrics:
     def observe(self, name: str, value: float, **labels):
         with self._lock:
             self.hists[self._key(name, labels)].append(value)
+
+    def gauge(self, name: str, value: float, **labels):
+        """Set-to-latest metric (e.g. overload state, queue depth)."""
+        with self._lock:
+            self.gauges[self._key(name, labels)] = value
 
     @staticmethod
     def _key(name, labels):
@@ -48,6 +54,8 @@ class Metrics:
         """Prometheus text exposition format."""
         lines = []
         for k, v in sorted(self.counters.items()):
+            lines.append(f"vsr_{k} {v}")
+        for k, v in sorted(self.gauges.items()):
             lines.append(f"vsr_{k} {v}")
         for k, vals in sorted(self.hists.items()):
             base, _, lab = k.partition("{")

@@ -41,8 +41,8 @@ from repro.core.plugins.base import PluginChain
 from repro.core.program import DecisionPlan, RouterProgram
 from repro.core.selection import select_many
 from repro.core.signals.plan import SignalPlan
-from repro.core.types import (Request, Response, RoutingOutcome,
-                              SignalResult)
+from repro.core.types import (Request, Response, RouterOverloadError,
+                              RoutingOutcome, SignalResult, SLOSpec)
 from repro.classifiers.backend import DOMAIN_LABELS
 
 
@@ -133,6 +133,9 @@ class RequestContext:
     joined: bool = False                    # rides an in-flight duplicate
     error: Optional[Exception] = None       # dispatch failed for THIS request
     wrapped: Optional[Tuple[Response, RoutingOutcome]] = None
+    slo: Optional[SLOSpec] = None           # resolved QoS class (admission)
+    skip_signals: bool = False              # degraded: skip encoder FLOPs
+    degraded: str = ""                      # model this request degraded to
 
 
 # ---------------------------------------------------------------------------
@@ -144,6 +147,63 @@ def stage_translate(router, ctxs: List[RequestContext]):
         c.req = router._inbound_translate(c.req)
 
 
+def stage_admission(router, ctxs: List[RequestContext]):
+    """SLO-aware admission control, BEFORE signal extraction spends any
+    encoder FLOPs.  A no-op unless the program declares a GLOBAL overload
+    policy AND the router has an overload detector attached — legacy
+    policies keep today's FIFO path byte-identically.
+
+    Under load, best-effort requests (SLO priority below ``shed_below``)
+    are degraded to their class's cheaper ``degrade_to`` model (at
+    ``busy`` and above) or shed with a typed ``RouterOverloadError``
+    carrying a retry-after hint (at ``overload``); premium passes."""
+    program = ctxs[0].program
+    detector = getattr(router, "overload", None)
+    policy = program.overload
+    if detector is None or policy is None:
+        return
+    state = detector.sample(policy)
+    for c in ctxs:
+        c.slo = program.request_slo(c.req)
+    if state == "ok":
+        return
+    for c in ctxs:
+        spec = c.slo
+        if spec.priority >= policy.shed_below:
+            METRICS.inc("admission_passed_total", slo=spec.cls)
+            continue
+        if spec.degrade_to:
+            # cascade to the cheaper model instead of queueing: the
+            # pinned model wins selection, and skip_signals spares the
+            # fused encoder pass for this row
+            c.skip_signals = True
+            c.degraded = spec.degrade_to
+            c.req.metadata["pinned_model"] = spec.degrade_to
+            c.root.child("admission:degrade").finish(
+                slo=spec.cls, to=spec.degrade_to, state=state)
+            METRICS.inc("admission_degraded_total", slo=spec.cls)
+        elif state == "overload":
+            err = RouterOverloadError(
+                f"router overloaded: {spec.cls} request shed",
+                retry_after_s=policy.retry_after_s, slo_class=spec.cls)
+            c.error = err
+            c.short = True
+            c.sig = SignalResult()
+            c.outcome = RoutingOutcome(
+                decision=None, model="", endpoint=None,
+                confidence=0.0, signals=c.sig)
+            c.response = Response(
+                str(err), model="", finish_reason="error",
+                headers={"x-vsr-error": "overload",
+                         "x-vsr-slo": spec.cls,
+                         "retry-after": f"{policy.retry_after_s:g}"})
+            c.root.child("admission:shed").finish(slo=spec.cls, state=state)
+            METRICS.inc("admission_rejected_total", slo=spec.cls,
+                        reason="overload")
+        else:
+            METRICS.inc("admission_passed_total", slo=spec.cls)
+
+
 def stage_signals(router, ctxs: List[RequestContext]):
     # the embedding plan: at most ONE backend.embed() call for the whole
     # batch's query texts, issued lazily when the first consumer (signals
@@ -153,31 +213,43 @@ def stage_signals(router, ctxs: List[RequestContext]):
     # backend (plus one batched token_classify for PII).
     program = ctxs[0].program
     plan = ctxs[0].plan
-    plan.register([c.req.latest_user_text for c in ctxs])
-    # open the per-request spans BEFORE extraction so their duration
-    # covers the batched signal wave (child spans carry each evaluator's
-    # own measured latency)
-    spans = [c.root.child("signals") for c in ctxs]
-    sigs = router.signals.extract_many([c.req for c in ctxs],
-                                       program.used_types or None,
-                                       embed_fn=plan.embed,
-                                       plan=ctxs[0].sig_plan,
-                                       signals_cfg=program.config.signals)
-    for c, sig_span, sig in zip(ctxs, spans, sigs):
-        c.sig = sig
-        for k, m in sig.matches.items():
-            sig_span.child(f"signal:{k}").finish(
-                matched=m.matched, conf=round(m.confidence, 3),
-                eval_ms=round(m.latency_ms, 3))
-            METRICS.inc("signal_evaluations_total", type=m.key.type)
-            if m.matched:
-                METRICS.inc("signal_matches_total", type=m.key.type)
-        sig_span.finish()
+    # shed and degraded requests are exempt from the encoder wave: the
+    # whole point of admission running first is that overload shedding
+    # costs zero signal FLOPs.  They still carry an (empty) SignalResult
+    # so downstream stages and headers stay total.
+    live = [c for c in ctxs if not (c.short or c.skip_signals)]
+    for c in ctxs:
+        if (c.short or c.skip_signals) and c.sig is None:
+            c.sig = SignalResult()
+    if live:
+        plan.register([c.req.latest_user_text for c in live])
+        # open the per-request spans BEFORE extraction so their duration
+        # covers the batched signal wave (child spans carry each
+        # evaluator's own measured latency)
+        spans = [c.root.child("signals") for c in live]
+        sigs = router.signals.extract_many(
+            [c.req for c in live],
+            program.used_types or None,
+            embed_fn=plan.embed,
+            plan=ctxs[0].sig_plan,
+            signals_cfg=program.config.signals)
+        for c, sig_span, sig in zip(live, spans, sigs):
+            c.sig = sig
+            for k, m in sig.matches.items():
+                sig_span.child(f"signal:{k}").finish(
+                    matched=m.matched, conf=round(m.confidence, 3),
+                    eval_ms=round(m.latency_ms, 3))
+                METRICS.inc("signal_evaluations_total", type=m.key.type)
+                if m.matched:
+                    METRICS.inc("signal_matches_total", type=m.key.type)
+            sig_span.finish()
     # the DecisionPlan: project the batch's signal results onto the
     # program's frozen vocabulary as (B, N) match/conf tensors, ready for
-    # stage_decide's single jitted gate call
+    # stage_decide's single jitted gate call.  The row list MUST match
+    # stage_decide's deciding list (everything not shed) exactly —
+    # degraded rows ride along as all-zero signal rows.
     if ctxs[0].dec_plan is not None:
-        ctxs[0].dec_plan.set_signals([c.sig for c in ctxs])
+        ctxs[0].dec_plan.set_signals([c.sig for c in ctxs if not c.short])
 
 
 def stage_decide(router, ctxs: List[RequestContext]):
@@ -187,13 +259,17 @@ def stage_decide(router, ctxs: List[RequestContext]):
     program = ctxs[0].program
     pending_begun: set = set()
     dplan = ctxs[0].dec_plan
+    # shed requests never decide; degraded ones do (their empty signal
+    # rows resolve to the default decision, then admission's pinned
+    # model wins selection)
+    deciding = [c for c in ctxs if not c.short]
     if dplan is not None and dplan.ready:
         # the whole batch decides in ONE jitted gate call against the
         # compiled program (EmbeddingPlan -> SignalPlan -> DecisionPlan)
         results = dplan.evaluate()
     else:
-        results = [program.engine.evaluate(c.sig) for c in ctxs]
-    for c, res in zip(ctxs, results):
+        results = [program.engine.evaluate(c.sig) for c in deciding]
+    for c, res in zip(deciding, results):
         dec_span = c.root.child("decision")
         dec_span.finish(
             decision=res.decision.name if res.decision else None,
@@ -219,6 +295,8 @@ def stage_decide(router, ctxs: List[RequestContext]):
 
 def stage_request_plugins(router, ctxs: List[RequestContext]):
     for c in ctxs:
+        if c.short:          # shed by admission: no chain was built
+            continue
         c.req, short, ptrace = c.chain.run_request(c.req)
         for t in ptrace:
             c.root.child(f"plugin:{t['plugin']}").finish(**t)
@@ -389,6 +467,19 @@ def stage_select(router, ctxs: List[RequestContext]):
                 METRICS.inc("lane_default_fallbacks_total", lane=lane)
                 c.model = fb
         c.outcome.model = c.model
+    # QoS: thread the resolved SLO priority down to the serving engine as
+    # payload metadata (a decision's own SLO block outranks the request's
+    # class).  Gated on has_slo so legacy programs never touch metadata.
+    if program.has_slo:
+        for c in ctxs:
+            spec = None
+            if c.decision is not None and c.decision.decision is not None:
+                spec = c.decision.decision.slo
+            if spec is None:
+                spec = c.slo or program.request_slo(c.req)
+            c.slo = spec
+            c.req.metadata["slo_priority"] = spec.priority
+            c.req.metadata["slo_class"] = spec.cls
 
 
 def stage_dispatch(router, ctxs: List[RequestContext]):
@@ -502,6 +593,8 @@ def stage_wrap(router, ctxs: List[RequestContext]):
         if c.joined:
             _resolve_join(router, c)
         c.response.headers.update(router._signal_headers(c.sig, c.decision))
+        if c.degraded:
+            c.response.headers.setdefault("x-vsr-degraded", c.degraded)
         latency = (time.perf_counter() - c.t0) * 1e3
         METRICS.observe("routing_latency_ms", latency)
         if not c.short and not c.joined and c.error is None:
@@ -525,6 +618,7 @@ def stage_wrap(router, ctxs: List[RequestContext]):
 # or deferred onto an in-flight duplicate's cache entry.
 STAGES: List[Tuple[str, Callable, bool]] = [
     ("translate", stage_translate, True),
+    ("admission", stage_admission, True),
     ("signals", stage_signals, True),
     ("decide", stage_decide, True),
     ("request_plugins", stage_request_plugins, True),

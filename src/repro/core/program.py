@@ -33,8 +33,8 @@ import numpy as np
 
 from repro.core.decision import (DecisionEngine, EngineResult,
                                  build_decision_gate)
-from repro.core.types import (Decision, RouterConfig, SignalKey,
-                              SignalResult)
+from repro.core.types import (Decision, Request, RouterConfig, SignalKey,
+                              SignalResult, SLOSpec)
 
 
 def _implied_halves(plugins: Dict[str, Dict[str, Any]]
@@ -97,6 +97,36 @@ class RouterProgram:
         self.selection: Tuple[SelectionBinding, ...] = tuple(
             SelectionBinding(d) for d in self.decisions)
         self.gate_calls = 0            # observability: jitted calls issued
+
+        # QoS: SLO classes declared across decisions (first declaration of a
+        # class name wins) + the GLOBAL overload policy.  has_slo == False
+        # means the program predates SLO config and every consumer must keep
+        # byte-identical FIFO behaviour.
+        self.slo_classes: Dict[str, SLOSpec] = {}
+        for d in self.decisions:
+            if d.slo is not None:
+                self.slo_classes.setdefault(d.slo.cls, d.slo)
+        self.overload = config.overload
+        self.has_slo = bool(self.slo_classes) or self.overload is not None
+
+    # ------------------------------------------------------------------
+    def request_slo(self, req: Request) -> SLOSpec:
+        """Resolve the SLO class a request belongs to, before signal
+        extraction (mirrors ``request_policy_name``): explicit
+        ``metadata["slo"]``, then the ``X-VSR-SLO`` header, then the
+        overload policy's ``default_class``, else an anonymous
+        best-effort class at priority 0."""
+        name = req.metadata.get("slo")
+        if not name:
+            for k, v in req.headers.items():
+                if k.lower() == "x-vsr-slo":
+                    name = v
+                    break
+        if not name and self.overload is not None:
+            name = self.overload.default_class
+        if name and name in self.slo_classes:
+            return self.slo_classes[name]
+        return SLOSpec(cls=str(name) if name else "best_effort")
 
     # ------------------------------------------------------------------
     def index_of(self, decision: Decision) -> int:

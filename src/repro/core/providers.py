@@ -104,6 +104,16 @@ class AuthFactory:
 # ---------------------------------------------------------------------------
 
 def to_provider_payload(req: Request, ep: Endpoint, model: str) -> dict:
+    payload = _provider_payload(req, ep, model)
+    # QoS sidecar fields: the local fleet transport reads these to order
+    # scheduler admission / arm preemption; remote providers ignore them
+    if req.metadata.get("slo_priority") is not None:
+        payload["vsr_priority"] = int(req.metadata["slo_priority"])
+        payload["vsr_slo"] = str(req.metadata.get("slo_class", ""))
+    return payload
+
+
+def _provider_payload(req: Request, ep: Endpoint, model: str) -> dict:
     msgs = [{"role": m.role, "content": m.content} for m in req.messages]
     if ep.provider in ("openai", "azure", "vllm", "ollama"):
         return {"model": model, "messages": msgs, "stream": req.stream}

@@ -87,6 +87,9 @@ class SemanticRouter:
         # escape hatch / benchmark baseline: False forces the sequential
         # per-request engine loop instead of the one-gate DecisionPlan
         self.use_decision_plan = True
+        # QoS: the serving layer attaches an OverloadDetector here
+        # (core never imports serving); None disables admission control
+        self.overload = None
         self.responses_state: "OrderedDict[str, Dict[str, Any]]" = \
             OrderedDict()
 
@@ -247,7 +250,7 @@ class SemanticRouter:
             if m.matched and k.startswith(("jailbreak:", "pii:")):
                 typ = k.split(":", 1)[0]
                 out[f"x-vsr-matched-{typ}"] = k.split(":", 1)[1]
-        if res.decision:
+        if res is not None and res.decision:
             out["x-vsr-decision"] = res.decision.name
         return out
 

@@ -153,6 +153,54 @@ class ModelProfile:
 # ---------------------------------------------------------------------------
 
 @dataclass
+class SLOSpec:
+    """Service tier declared by a decision's ``SLO { ... }`` block (§QoS).
+
+    ``cls`` names the SLO class; requests select it via
+    ``metadata["slo"]`` or the ``X-VSR-SLO`` header.  ``priority`` orders
+    scheduler admission and arms preemption (higher evicts lower);
+    ``ttft_ms`` is the class's TTFT target (0 = untracked) and
+    ``degrade_to`` names the cheaper model this class falls back to under
+    overload (empty = shed instead of degrading)."""
+    cls: str = "standard"
+    priority: int = 0
+    ttft_ms: float = 0.0
+    degrade_to: str = ""
+
+
+@dataclass
+class OverloadPolicy:
+    """GLOBAL ``overload: { ... }``: detector thresholds + admission rules.
+
+    The overload detector trips when the aggregate engine queue depth,
+    paged-pool free-block fraction, or EWMA TTFT crosses these limits;
+    ``slot_occupancy`` marks the busy band.  Requests whose SLO priority
+    is below ``shed_below`` are best-effort: under overload they are shed
+    (typed rejection carrying ``retry_after_s``) or degraded to their
+    class's ``degrade_to`` model.  ``default_class`` resolves requests
+    that declare no SLO class."""
+    queue_depth: int = 64
+    slot_occupancy: float = 0.95
+    free_block_frac: float = 0.05
+    ttft_ms: float = 0.0
+    shed_below: int = 100
+    retry_after_s: float = 1.0
+    default_class: str = ""
+
+
+class RouterOverloadError(RuntimeError):
+    """Typed admission rejection: the router is overloaded and this
+    request was shed (never dispatched).  ``retry_after_s`` is the
+    client backoff hint surfaced as a ``retry-after`` header."""
+
+    def __init__(self, message: str = "router overloaded", *,
+                 retry_after_s: float = 1.0, slo_class: str = ""):
+        super().__init__(message)
+        self.retry_after_s = retry_after_s
+        self.slo_class = slo_class
+
+
+@dataclass
 class Decision:
     name: str
     rule: "RuleNode"              # repro.core.decision.RuleNode
@@ -162,6 +210,7 @@ class Decision:
     algorithm: str = "static"
     algorithm_config: Dict[str, Any] = field(default_factory=dict)
     description: str = ""
+    slo: Optional[SLOSpec] = None
 
 
 @dataclass
@@ -182,6 +231,9 @@ class RouterConfig:
     # 0.0 disables it, 1.0 routes purely toward the member/endpoint
     # holding the longest cached prefix of the conversation
     prefix_affinity: float = 0.0
+    # QoS: overload detection thresholds + admission rules; None keeps
+    # the pre-SLO behaviour (FIFO, no shedding, no preemption)
+    overload: Optional[OverloadPolicy] = None
 
     def used_signal_types(self) -> set:
         from repro.core.decision import leaf_keys

@@ -166,6 +166,12 @@ def build_router(reduced: bool = True, gen_tokens: int = 8,
                        model_axis=model_axis)
     m2a = {m: p.arch for m, p in cfg.model_profiles.items() if p.arch}
     router = SemanticRouter(cfg, call_fn=fleet.call_fn(m2a))
+    # QoS: admission control samples engine load through this detector;
+    # policies without a GLOBAL overload block never consult it
+    from repro.serving.overload import OverloadDetector
+    detector = OverloadDetector()
+    detector.attach_fleet(fleet)
+    router.overload = detector
     return router, fleet
 
 
@@ -250,6 +256,8 @@ def main(argv=None):
     if args.async_mode:
         from repro.serving.frontend import AsyncFrontend
         fe = AsyncFrontend(router, window_ms=args.window_ms)
+        if getattr(router, "overload", None) is not None:
+            router.overload.attach_frontend(fe)
         futs = []
         for r in reqs:                      # staggered concurrent arrivals
             futs.append(fe.submit(r))

@@ -143,7 +143,10 @@ class BackendLane:
     """Protocol for one execution lane of the Mixture-of-Modality fleet.
 
     ``modality``    lane type: "text" | "image" | "audio".
-    ``submit(prompt, max_new=) -> rid``   queue one request payload.
+    ``submit(prompt, max_new=, priority=, slo=) -> rid``   queue one
+                    request payload; ``priority`` orders scheduler
+                    admission and arms preemption on AR lanes (lanes
+                    without a priority queue may ignore it).
     ``step() -> [finished]``              advance the lane's batch one
                                           iteration; finished jobs carry
                                           ``.rid`` and timing fields.
@@ -160,7 +163,8 @@ class BackendLane:
 
     modality = "text"
 
-    def submit(self, prompt: str, max_new: Optional[int] = None) -> int:
+    def submit(self, prompt: str, max_new: Optional[int] = None,
+               priority: int = 0, slo: str = "") -> int:
         raise NotImplementedError
 
     def step(self) -> List[object]:
@@ -187,11 +191,12 @@ class ARLane(BackendLane):
         self.m = member
         self.sched = fleet._make_scheduler(member)
 
-    def submit(self, prompt: str, max_new: Optional[int] = None) -> int:
+    def submit(self, prompt: str, max_new: Optional[int] = None,
+               priority: int = 0, slo: str = "") -> int:
         m = self.m
         return self.sched.submit(
             hash_tokens(prompt, m.cfg.vocab_size, m.prompt_cap),
-            max_new=max_new)
+            max_new=max_new, priority=priority, slo=slo)
 
     @property
     def pending(self) -> int:
@@ -268,6 +273,8 @@ class ARLane(BackendLane):
         sched.admitted = sched.decode_steps = sched.slot_steps = 0
         sched.masked_slot_steps = 0
         sched.prefill_tokens = sched.cached_tokens = 0
+        sched.preempted = 0
+        sched.ttft_ewma = 0.0
         if getattr(sched, "paged", False):
             sched.pool.stats = PoolStats()
         sched._finished.clear()
@@ -291,9 +298,11 @@ class AudioLane(ARLane):
         f = rng.standard_normal((1, cfg.cross_ctx_len, cfg.d_model))
         return jnp.asarray(f, jnp.dtype(cfg.dtype))
 
-    def submit(self, prompt: str, max_new: Optional[int] = None) -> int:
+    def submit(self, prompt: str, max_new: Optional[int] = None,
+               priority: int = 0, slo: str = "") -> int:
         return self.sched.submit(np.asarray([4], np.int32), max_new=max_new,
-                                 cross=self._frames(prompt))
+                                 cross=self._frames(prompt),
+                                 priority=priority, slo=slo)
 
     def _warmup_widths(self) -> List[int]:
         # audio requests always decode from a 1-token BOS prompt
@@ -376,7 +385,10 @@ class DiffusionLane(BackendLane):
 
     # -- protocol -----------------------------------------------------------
 
-    def submit(self, prompt: str, max_new: Optional[int] = None) -> int:
+    def submit(self, prompt: str, max_new: Optional[int] = None,
+               priority: int = 0, slo: str = "") -> int:
+        # the denoiser's fixed-step FIFO has no priority queue; QoS
+        # ordering applies to AR lanes
         self._rid += 1
         self.queue.append(DiffusionJob(self._rid, prompt,
                                        time.perf_counter()))
@@ -487,71 +499,115 @@ class LocalFleet:
         self._done_cv = threading.Condition()
         self._done_cap = 4096
         self._waiting: set = set()       # keys some drain is waiting on
-        key = jax.random.PRNGKey(seed)
+        self._key = jax.random.PRNGKey(seed)
+        # build options retained so the autoscaler can construct standby
+        # members later with identical shapes/seeding
+        self._build = dict(reduced=reduced, batch=batch, max_seq=max_seq,
+                           moe_impl=moe_impl, paged=paged,
+                           block_tokens=block_tokens, kv_blocks=kv_blocks)
+        self.archs = list(archs)         # base membership: never scaled below
         for arch in archs:
-            if arch in DIFFUSION_ARCHS:
-                member = DiffusionMember(arch, batch=batch)
-                lane: BackendLane = DiffusionLane(member,
-                                                  **DIFFUSION_ARCHS[arch])
-            else:
-                cfg = get_reduced(arch) if reduced else get_config(arch)
-                if cfg.n_experts:
-                    # serving is dropless: capacity >= the per-call token
-                    # count, so expert keep/drop never depends on which
-                    # other tokens share the dispatch group.  Capacity
-                    # drops would make a 16-wide paged suffix prefill
-                    # diverge from the same tokens inside a 64-wide
-                    # contiguous prefill (different queue population)
-                    cfg = cfg.replace(moe_capacity_factor=max(
-                        cfg.moe_capacity_factor,
-                        cfg.n_experts / max(1, cfg.moe_top_k)))
-                with sharding_rules(self.mesh,
-                                    R.act_rules(self.mesh, batch)):
-                    pre_row, dec, merge = serve_lib.build_row_serve_steps(
-                        cfg, moe_impl=moe_impl)
-                    sh = serve_lib.serve_shardings(cfg, self.mesh, batch,
-                                                   max_seq)
-                    params = jax.jit(
-                        lambda k, c=cfg: MD.init_params(c, k),
-                        out_shardings=sh["param_sharding"])(key)
-                exact = any(s.mixer in SSM_MIXERS
-                            for g in cfg.groups for s in g.period)
-                can_page = (MD.paged_supported(cfg)
-                            and max_seq % block_tokens == 0)
-                if paged is True and not can_page:
-                    raise ValueError(
-                        f"{arch}: paged KV unsupported (SSM/cross-attn "
-                        f"state or max_seq % block_tokens != 0)")
-                use_paged = can_page if paged == "auto" else bool(paged)
-                pf = ps = cpb = None
-                nblk = 0
-                if use_paged:
-                    with sharding_rules(self.mesh,
-                                        R.act_rules(self.mesh, batch)):
-                        pf, ps, dec, cpb = serve_lib.build_paged_serve_steps(
-                            cfg, moe_impl=moe_impl)
-                    bpr = max_seq // block_tokens
-                    # 1 trash + a full table per slot + retained-prefix
-                    # headroom (~4 rows) for the cross-request hit rate
-                    nblk = kv_blocks or (1 + (batch + 4) * bpr)
-                member = FleetMember(arch, cfg, params, pre_row, dec, merge,
-                                     batch, max_seq,
-                                     prompt_cap=max_seq - gen_tokens - 1,
-                                     exact_prefill=exact,
-                                     paged=use_paged,
-                                     prefill_paged_fresh=pf,
-                                     prefill_paged_suffix=ps,
-                                     copy_block=cpb,
-                                     block_tokens=block_tokens,
-                                     num_blocks=nblk)
-                lane_cls = AudioLane if cfg.family == "audio" else ARLane
-                lane = lane_cls(self, member)
-                self.schedulers[arch] = lane.sched
+            self.add_member(arch, warmup=warmup)
+
+    def _build_lane(self, arch: str) -> Tuple[object, BackendLane]:
+        """Construct one member + lane (params init, jitted serve steps,
+        paged pool sizing).  Pure build — no registration, no warmup."""
+        b = self._build
+        reduced, batch, max_seq = b["reduced"], b["batch"], b["max_seq"]
+        moe_impl, paged = b["moe_impl"], b["paged"]
+        block_tokens, kv_blocks = b["block_tokens"], b["kv_blocks"]
+        if arch in DIFFUSION_ARCHS:
+            member: object = DiffusionMember(arch, batch=batch)
+            lane: BackendLane = DiffusionLane(member,
+                                              **DIFFUSION_ARCHS[arch])
+            return member, lane
+        cfg = get_reduced(arch) if reduced else get_config(arch)
+        if cfg.n_experts:
+            # serving is dropless: capacity >= the per-call token
+            # count, so expert keep/drop never depends on which
+            # other tokens share the dispatch group.  Capacity
+            # drops would make a 16-wide paged suffix prefill
+            # diverge from the same tokens inside a 64-wide
+            # contiguous prefill (different queue population)
+            cfg = cfg.replace(moe_capacity_factor=max(
+                cfg.moe_capacity_factor,
+                cfg.n_experts / max(1, cfg.moe_top_k)))
+        with sharding_rules(self.mesh,
+                            R.act_rules(self.mesh, batch)):
+            pre_row, dec, merge = serve_lib.build_row_serve_steps(
+                cfg, moe_impl=moe_impl)
+            sh = serve_lib.serve_shardings(cfg, self.mesh, batch,
+                                           max_seq)
+            params = jax.jit(
+                lambda k, c=cfg: MD.init_params(c, k),
+                out_shardings=sh["param_sharding"])(self._key)
+        exact = any(s.mixer in SSM_MIXERS
+                    for g in cfg.groups for s in g.period)
+        can_page = (MD.paged_supported(cfg)
+                    and max_seq % block_tokens == 0)
+        if paged is True and not can_page:
+            raise ValueError(
+                f"{arch}: paged KV unsupported (SSM/cross-attn "
+                f"state or max_seq % block_tokens != 0)")
+        use_paged = can_page if paged == "auto" else bool(paged)
+        pf = ps = cpb = None
+        nblk = 0
+        if use_paged:
+            with sharding_rules(self.mesh,
+                                R.act_rules(self.mesh, batch)):
+                pf, ps, dec, cpb = serve_lib.build_paged_serve_steps(
+                    cfg, moe_impl=moe_impl)
+            bpr = max_seq // block_tokens
+            # 1 trash + a full table per slot + retained-prefix
+            # headroom (~4 rows) for the cross-request hit rate
+            nblk = kv_blocks or (1 + (batch + 4) * bpr)
+        member = FleetMember(arch, cfg, params, pre_row, dec, merge,
+                             batch, max_seq,
+                             prompt_cap=max_seq - self.gen_tokens - 1,
+                             exact_prefill=exact,
+                             paged=use_paged,
+                             prefill_paged_fresh=pf,
+                             prefill_paged_suffix=ps,
+                             copy_block=cpb,
+                             block_tokens=block_tokens,
+                             num_blocks=nblk)
+        lane_cls = AudioLane if cfg.family == "audio" else ARLane
+        return member, lane_cls(self, member)
+
+    def add_member(self, arch: str, *, warmup: bool = True) -> bool:
+        """Build, warm up, and register one member (the autoscaler's
+        scale-up hook).  Construction and warmup run OUTSIDE the fleet
+        lock — they take seconds of XLA compile and must not stall
+        serving; registration is atomic and race-checked."""
+        with self._lock:
+            if arch in self.members:
+                return False
+        member, lane = self._build_lane(arch)
+        if warmup:
+            lane.warmup()
+        with self._lock:
+            if arch in self.members:     # raced with a concurrent add
+                return False
             self.members[arch] = member
             self.lanes[arch] = lane
+            if isinstance(lane, ARLane):
+                self.schedulers[arch] = lane.sched
             self._step_locks[arch] = threading.Lock()
-            if warmup:
-                lane.warmup()
+        return True
+
+    def remove_member(self, arch: str) -> bool:
+        """Deregister an idle member (the autoscaler's scale-down hook).
+        Refuses while the lane has queued or in-flight work; base members
+        are the autoscaler's responsibility to exempt."""
+        with self._lock:
+            lane = self.lanes.get(arch)
+            if lane is None or lane.pending:
+                return False
+            del self.members[arch]
+            del self.lanes[arch]
+            self.schedulers.pop(arch, None)
+            self._step_locks.pop(arch, None)
+        return True
 
     def modality_of(self, arch: str) -> str:
         return self.lanes[arch].modality
@@ -575,7 +631,8 @@ class LocalFleet:
     # -- generation ---------------------------------------------------------
 
     def generate(self, arch: str, prompts: List[str],
-                 max_new: Optional[int] = None) -> List[dict]:
+                 max_new: Optional[int] = None, priority: int = 0,
+                 slo: str = "") -> List[dict]:
         """Greedy generation (or image/transcript synthesis) via the
         arch's lane.  Any number of prompts is accepted: overflow beyond
         the slot count is queued and admitted as slots free (never
@@ -583,15 +640,18 @@ class LocalFleet:
         concurrent callers' requests share the in-flight batch."""
         with self._lock:
             self.members[arch].calls += 1
-            rids = self._submit(arch, prompts, max_new)
+            rids = self._submit(arch, prompts, max_new,
+                                priority=priority, slo=slo)
         seqs = self._drain({arch: rids})
         lane = self.lanes[arch]
         return [lane.result(seqs[(arch, r)]) for r in rids]
 
     def _submit(self, arch: str, prompts: List[str],
-                max_new: Optional[int] = None) -> List[int]:
+                max_new: Optional[int] = None, *, priority: int = 0,
+                slo: str = "") -> List[int]:
         lane = self.lanes[arch]
-        return [lane.submit(p, max_new=max_new) for p in prompts]
+        return [lane.submit(p, max_new=max_new, priority=priority, slo=slo)
+                for p in prompts]
 
     def _drain(self, rids_by_arch: Dict[str, List[int]]
                ) -> Dict[Tuple[str, int], object]:
@@ -670,7 +730,11 @@ class LocalFleet:
             # msgs[-1] silently dropped multi-turn context from both the
             # scheduler prompt and usage accounting
             prompt = "\n".join(m["content"] for m in msgs)
-            return model, arch, prompt
+            # QoS sidecar fields attached by to_provider_payload: the
+            # scheduler orders admission by priority / preempts on it
+            prio = int(payload.get("vsr_priority", 0) or 0)
+            slo = str(payload.get("vsr_slo", "") or "")
+            return model, arch, prompt, prio, slo
 
         def _wrap(model, prompt, out):
             message = {"content": out["content"]}
@@ -692,8 +756,8 @@ class LocalFleet:
                               "vsr_lane": out.get("lane", "text")}}
 
         def call(ep, payload, headers):
-            model, arch, prompt = _resolve(payload)
-            out = self.generate(arch, [prompt])[0]
+            model, arch, prompt, prio, slo = _resolve(payload)
+            out = self.generate(arch, [prompt], priority=prio, slo=slo)[0]
             return _wrap(model, prompt, out)
 
         def batch_call(ep, payloads, headers_list):
@@ -701,8 +765,9 @@ class LocalFleet:
             with self._lock:
                 rids_by_arch: Dict[str, List[int]] = {}
                 rid_of: List[int] = []
-                for model, arch, prompt in resolved:
-                    rid = self._submit(arch, [prompt])[0]
+                for model, arch, prompt, prio, slo in resolved:
+                    rid = self._submit(arch, [prompt],
+                                       priority=prio, slo=slo)[0]
                     rids_by_arch.setdefault(arch, []).append(rid)
                     rid_of.append(rid)
                 for arch in rids_by_arch:
@@ -710,7 +775,8 @@ class LocalFleet:
             seqs = self._drain(rids_by_arch)
             return [_wrap(model, prompt,
                           self.lanes[arch].result(seqs[(arch, rid)]))
-                    for (model, arch, prompt), rid in zip(resolved, rid_of)]
+                    for (model, arch, prompt, _pr, _sl), rid
+                    in zip(resolved, rid_of)]
 
         call.batch_call = batch_call
         return call

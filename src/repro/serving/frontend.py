@@ -31,7 +31,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
 from repro.core.observability import METRICS
-from repro.core.types import Request
+from repro.core.types import Request, RouterOverloadError
 
 
 @dataclass
@@ -49,10 +49,14 @@ class FrontendStats:
 
 class AsyncFrontend:
     def __init__(self, router, *, window_ms: float = 15.0,
-                 max_batch: int = 32):
+                 max_batch: int = 32, max_depth: int = 256):
         self.router = router
         self.window_s = window_ms / 1e3
         self.max_batch = max_batch
+        # pending-queue bound: an unbounded arrival queue just converts
+        # overload into unbounded memory growth and unbounded latency —
+        # beyond this depth submits fail fast with a typed overload error
+        self.max_depth = max_depth
         self.stats = FrontendStats()
         self._q: "queue.Queue[Optional[Tuple[Request, Future]]]" = \
             queue.Queue()
@@ -71,9 +75,24 @@ class AsyncFrontend:
         with self._state_lock:
             if self._closed:
                 raise RuntimeError("frontend is closed")
+            depth = self._q.qsize()
+            if depth >= self.max_depth:
+                # retry-after hint: how long the backlog takes to drain at
+                # one max_batch per arrival window (floor 50ms)
+                retry = max(0.05,
+                            depth / max(1, self.max_batch) * self.window_s)
+                METRICS.inc("admission_rejected_total", reason="queue_full")
+                raise RouterOverloadError(
+                    f"frontend queue full ({depth} pending)",
+                    retry_after_s=retry)
             fut: Future = Future()
             self._q.put((req, fut))
             return fut
+
+    @property
+    def queue_depth(self) -> int:
+        """Pending (not yet batched) requests — an overload probe input."""
+        return self._q.qsize()
 
     def reload_policy(self, name: str, dsl_text: str):
         """Zero-downtime policy swap through the serving layer: the new

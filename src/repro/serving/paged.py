@@ -83,6 +83,12 @@ class BlockPool:
     def ref(self, bid: int) -> int:
         return self._blocks[bid].ref
 
+    def live_refs(self) -> int:
+        """Total outstanding references across all blocks — 0 when every
+        row has released (leak check for preemption park/resume)."""
+        with self._lock:
+            return sum(b.ref for b in self._blocks)
+
     def match(self, hashes: Sequence[int]) -> int:
         """Number of leading full blocks already resident (chain hashes
         make any hit a prefix hit, so a simple count suffices)."""

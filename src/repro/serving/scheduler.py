@@ -85,6 +85,10 @@ class SequenceState:
     cross: Optional[object] = None  # per-request cross-attn context (1,T,d)
     cached_tokens: int = 0          # prompt tokens served from the prefix cache
     prefill_tokens: int = 0         # prompt tokens actually prefilled
+    priority: int = 0               # QoS admission priority (higher first)
+    slo: str = ""                   # SLO class label (observability)
+    folded: int = 0                 # out tokens folded into ids by _park
+    parks: int = 0                  # times this sequence was preempted
 
     @property
     def ttft_ms(self) -> float:
@@ -143,21 +147,50 @@ class DecodeScheduler:
         self.masked_slot_steps = 0       # freed lanes masked out of decode
         self.prefill_tokens = 0          # prompt tokens actually prefilled
         self.cached_tokens = 0           # prompt tokens served from cache
+        self.preempted = 0               # rows parked by priority preemption
+        self.ttft_ewma = 0.0             # EWMA TTFT ms (overload detector)
 
     # -- public API ---------------------------------------------------------
 
     def submit(self, ids: np.ndarray, *, max_new: Optional[int] = None,
-               cross: Optional[object] = None) -> int:
+               cross: Optional[object] = None, priority: int = 0,
+               slo: str = "") -> int:
         """Queue one tokenized prompt; returns a request id whose result
         is delivered by a later ``step()``.  ``cross`` is an optional
         per-request cross-attention context (e.g. the audio lane's encoded
-        frames); members without cross-attention ignore it."""
+        frames); members without cross-attention ignore it.  ``priority``
+        orders admission (higher first, FIFO within a class; priority 0
+        everywhere reproduces the legacy pure-FIFO queue exactly) and
+        arms preemption: a queued arrival strictly above the lowest
+        in-flight priority evicts that row when no slot is free."""
         self._rid += 1
         seq = SequenceState(rid=self._rid, ids=np.asarray(ids, np.int32),
                             max_new=max_new or self.gen_tokens,
-                            t_submit=time.perf_counter(), cross=cross)
-        self.queue.append(seq)
+                            t_submit=time.perf_counter(), cross=cross,
+                            priority=priority, slo=slo)
+        self._enqueue(seq)
         return self._rid
+
+    def _enqueue(self, seq: SequenceState, *, requeue: bool = False):
+        """Priority-ordered insert.  Arrivals go behind every queued
+        request of the same or higher priority (FIFO within a class —
+        with all priorities 0 this is a plain append, byte-identical to
+        the legacy FIFO).  Park-requeues go AHEAD of same-priority
+        waiters: a preempted row already holds generation progress and
+        its parked blocks are hottest now."""
+        q = self.queue
+        p = seq.priority
+        i = len(q)
+        if requeue:
+            while i > 0 and q[i - 1].priority <= p:
+                i -= 1
+        else:
+            while i > 0 and q[i - 1].priority < p:
+                i -= 1
+        if i == len(q):
+            q.append(seq)
+        else:
+            q.insert(i, seq)
 
     @property
     def pending(self) -> int:
@@ -176,6 +209,9 @@ class DecodeScheduler:
             while len(self._finished) > self._finished_cap:
                 self._finished.popitem(last=False)
             METRICS.observe("fleet_ttft_ms", seq.ttft_ms, arch=self.m.arch)
+            # EWMA TTFT feeds the overload detector's busy/overload grade
+            self.ttft_ewma = seq.ttft_ms if self.ttft_ewma == 0.0 else \
+                0.8 * self.ttft_ewma + 0.2 * seq.ttft_ms
         return done
 
     def drain(self) -> List[SequenceState]:
@@ -192,7 +228,9 @@ class DecodeScheduler:
 
     def _admit(self, done: List[SequenceState]):
         m = self.m
-        while self.queue and None in self.active:
+        while self.queue:
+            if None not in self.active and not self._try_preempt():
+                break
             slot = self.active.index(None)
             seq = self.queue[0]
             res = (self._prefill_paged(seq, slot) if self.paged
@@ -203,16 +241,69 @@ class DecodeScheduler:
             self.queue.popleft()
             first, plen = res
             seq.slot = slot
-            seq.t_first = time.perf_counter()
+            if seq.t_first == 0.0:   # resumes keep their original TTFT
+                seq.t_first = time.perf_counter()
             seq.out.append(first)
             self.pos[slot] = plen
             self.last_tok[slot] = first
             self.active[slot] = seq
             self.admitted += 1
-            m.prompts_in += 1
+            if seq.parks == 0:       # a resume is not a new prompt
+                m.prompts_in += 1
             m.tokens_out += 1
             if len(seq.out) >= seq.max_new:
                 self._finish(seq, done)
+
+    def _try_preempt(self) -> bool:
+        """Evict the lowest-priority in-flight row to make room for a
+        strictly higher-priority queued arrival.  Victim choice: lowest
+        priority, newest submission breaking ties (it has done the least
+        aged work).  Never fires between equal priorities — with no SLO
+        config every priority is 0 and this is a no-op."""
+        head = self.queue[0]
+        live = [s for s in self.active if s is not None]
+        if not live:
+            return False
+        victim = min(live, key=lambda s: (s.priority, -s.t_submit))
+        if victim.priority >= head.priority:
+            return False
+        self._park(victim)
+        return True
+
+    def _park(self, seq: SequenceState):
+        """Preempt an in-flight row, parking its state for a later
+        token-exact resume through the normal admission path.
+
+        The last sampled token's KV was never written (it is sampled at
+        park time but not yet fed back), so it is POPPED and re-derived
+        by the resume prefill.  Every other generated token folds into
+        ``ids`` (``folded`` marks the boundary so ``_finish`` never
+        double-counts them), and in paged mode the row's blocks are
+        released WITH their chain hashes — they retire to the pool's LRU
+        still matchable, so resume re-maps them via the prefix-match
+        path and re-prefills only the single popped token."""
+        slot = seq.slot
+        if len(seq.out) > seq.folded:
+            seq.out.pop()            # KV never written: re-derive at resume
+        if len(seq.out) > seq.folded:
+            seq.ids = np.concatenate(
+                [seq.ids, np.asarray(seq.out[seq.folded:], np.int32)])
+        seq.folded = len(seq.out)
+        if self.paged and self.row_blocks[slot] is not None:
+            self.pool.release(self.row_blocks[slot],
+                              chain_hashes(seq.ids.tolist(),
+                                           self.m.block_tokens))
+            self.row_blocks[slot] = None
+            self.tbl[slot] = 0
+        self.active[slot] = None
+        self.pos[slot] = 0
+        self.last_tok[slot] = 0
+        seq.slot = -1
+        seq.parks += 1
+        self.preempted += 1
+        METRICS.inc("preemptions_total", arch=self.m.arch,
+                    slo=seq.slo or "none")
+        self._enqueue(seq, requeue=True)
 
     def _prefill_contiguous(self, seq: SequenceState, slot: int):
         """Single-row bucketed prefill into a fresh batch-1 cache, merged
@@ -253,8 +344,11 @@ class DecodeScheduler:
         matched = self.pool.match(hashes)
         start = min(matched * blk, n - 1)     # >= 1 suffix token to sample
         suffix = n - start
+        # remaining budget, not max_new: a resumed row's folded output is
+        # already inside ``n`` and must not inflate the allocation
+        remaining = seq.max_new - len(seq.out)
         total = max(matched, min(self.max_blocks,
-                                 -(-(n + seq.max_new + 1) // blk)))
+                                 -(-(n + remaining + 1) // blk)))
         row = self.pool.admit(hashes[:matched], total,
                               new_hashes=hashes[matched:])
         if row is None:
@@ -331,9 +425,13 @@ class DecodeScheduler:
             # a later turn extending this conversation re-matches them),
             # then drop our references; unreferenced hashed blocks retire
             # to the pool's LRU until evicted or re-matched
-            written = len(seq.ids) + max(0, len(seq.out) - 1)
+            # out tokens up to ``folded`` already live inside ids (parked
+            # rows fold them in); counting them again would register wrong
+            # content->hash mappings and poison the prefix index
+            written = len(seq.ids) + max(0, len(seq.out) - seq.folded - 1)
             all_ids = np.concatenate(
-                [seq.ids, np.asarray(seq.out[:-1], np.int32)])[:written]
+                [seq.ids,
+                 np.asarray(seq.out[seq.folded:-1], np.int32)])[:written]
             self.pool.release(self.row_blocks[seq.slot],
                               chain_hashes(all_ids.tolist(),
                                            self.m.block_tokens))
