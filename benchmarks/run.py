@@ -16,6 +16,7 @@ ALIASES = {
     "t_decision_overhead": "decision",
     "t_prefix_cache": "prefix",
     "t_slo_burst": "slo",
+    "t_disagg_decode": "disagg",
 }
 
 
@@ -32,6 +33,11 @@ def _prefix_rows():
 def _slo_rows():
     from benchmarks import t_slo_burst
     return t_slo_burst.rows(t_slo_burst.run(burst_n=24, premium_n=4))
+
+
+def _disagg_rows():
+    from benchmarks import t_disagg_decode
+    return t_disagg_decode.rows(t_disagg_decode.run(long_n=3))
 
 
 def get_suites():
@@ -60,6 +66,7 @@ def get_suites():
         "roofline": roofline_table.run,
         "prefix": _prefix_rows,
         "slo": _slo_rows,
+        "disagg": _disagg_rows,
     }
 
 

@@ -6,17 +6,49 @@ softmax.  The tile math is shared with ``kernels/flash_attention`` — decode
 is the Sq=G specialization of the folded kernel: the G grouped q-heads of one
 KV head become the q-tile rows, so the MXU tile is (G, hd) x (hd, bk).
 Rows are padded to the 8-sublane minimum for TPU tiling.
+
+Paged variants (``paged_flash_decode`` / ``paged_flash_decode_mla``) read
+the physical block pool DIRECTLY through each row's block table: the table
+and per-row ``kv_len`` ride the scalar-prefetch channel
+(``pltpu.PrefetchScalarGridSpec``), so the KV BlockSpec index map resolves
+``tbl[row, ki]`` on the scalar core one grid step ahead of the compute —
+only the row's LIVE physical blocks are ever DMA'd HBM->VMEM.  Nothing
+materializes the ``(B, max_blocks*block_tokens, ...)`` gathered view the
+old fallback built (``gather_kv`` below survives purely as the test
+oracle's gather helper).  Grid iterations past a row's last live block
+clamp their index map to the last live block — Pallas skips the copy for
+a repeated block index — and skip their compute via ``pl.when``; a row
+with ``kv_len == 0`` contributes exact zeros.
+
+Numerics: decode must be TOKEN-EXACT against the XLA decode path
+(``layers.sdpa`` / ``layers.mla_attention``) — greedy sampling flips on
+last-ulp logit ties, so "close" is not enough.  The paged kernels
+therefore stash per-block scores and values in VMEM scratch while
+streaming, and run ONE full softmax + PV contraction at the final grid
+step with the exact op order of the XLA path — including the cast of the
+probabilities to the value dtype before the PV product (the XLA paths
+quantize there; an online-softmax f32 accumulation diverges by ~4e-3 on
+bf16 serving configs, enough to flip argmax).  The scratch is
+O(max_blocks * block_tokens) per (row, head) program — decode contexts
+at serving scale are VMEM-resident; a truly long-context deployment
+would trade this bit-exactness back for streaming online softmax.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.flash_attention.flash_attention import \
     flash_attention_folded
+from repro.kernels.pallas_compat import CompilerParams
+
+NEG_INF = -1e30
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -48,12 +80,9 @@ def gather_kv(pool, tbl):
 
     pool: (num_blocks, block_tokens, Hkv, hd) physical blocks;
     tbl: (B, max_blocks) int32 block table (0 = trash block).
-    Returns (B, max_blocks * block_tokens, Hkv, hd) — each row's cache
-    laid out exactly as the contiguous path would hold it, so every
-    downstream consumer (the folded Pallas kernel, plain sdpa, the
-    reference oracle) is reused unchanged.  Positions past a row's
-    ``kv_len`` gather trash/garbage blocks and are masked by the
-    consumer, contributing exact zeros.
+    Returns (B, max_blocks * block_tokens, Hkv, hd).  This is the TEST
+    oracle's gather — the serving kernels below never build this tensor;
+    they stream blocks through the scalar-prefetched table instead.
     """
     nb, blk = pool.shape[:2]
     flat = pool.reshape((nb * blk,) + pool.shape[2:])
@@ -61,19 +90,218 @@ def gather_kv(pool, tbl):
     return flat[idx.reshape(tbl.shape[0], -1)]
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
-def paged_flash_decode(q, kpool, vpool, tbl, kv_len, *, block_k: int = 128,
+# ---------------------------------------------------------------------------
+# block-table GQA decode kernel
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(tbl_ref, lens_ref,        # scalar prefetch
+                  q_ref, k_ref, v_ref,      # VMEM blocks
+                  o_ref,                    # output block
+                  s_scr, v_scr,             # VMEM scratch
+                  *, scale: float, blk: int, grid_k: int, hkv: int):
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+    b = bh // hkv
+
+    @pl.when(ki == 0)
+    def _init():
+        # dead/never-stashed columns must read as masked scores and zero
+        # values so the final softmax+PV reproduces the XLA path exactly
+        s_scr[...] = jnp.full_like(s_scr, NEG_INF)
+        v_scr[...] = jnp.zeros_like(v_scr)
+
+    kvl = lens_ref[b]
+
+    @pl.when(ki * blk < kvl)                # dead tail blocks: no compute
+    def _stash():
+        q = q_ref[0].astype(jnp.float32)            # (Gp, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (blk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        gp = q.shape[0]
+        cols = ki * blk + jax.lax.broadcasted_iota(jnp.int32, (gp, blk), 1)
+        s = jnp.where(cols < kvl, s, NEG_INF)
+        pl.store(s_scr, (slice(None), pl.dslice(ki * blk, blk)), s)
+        pl.store(v_scr, (pl.dslice(ki * blk, blk), slice(None)),
+                 v_ref[0, :, 0, :].astype(jnp.float32))
+
+    @pl.when(ki == grid_k - 1)
+    def _finish():
+        # identical op order to layers.sdpa: f32 softmax over the full
+        # (masked) row, probs quantized to the value dtype, one PV dot.
+        # kv_len == 0 rows: uniform probs x all-zero values == exact zeros.
+        probs = jax.nn.softmax(s_scr[...], axis=-1)
+        probs = probs.astype(v_ref.dtype).astype(jnp.float32)
+        o_ref[0] = jax.lax.dot_general(
+            probs, v_scr[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _live_block(lens_ref, b, ki, blk):
+    """Clamp grid step ``ki`` to the row's last live block: repeated block
+    indices make the Pallas pipeline skip the (re-)fetch, so padding-tail
+    iterations cost neither DMA nor (via ``pl.when``) compute."""
+    live = jax.lax.div(lens_ref[b] + (blk - 1), blk)
+    return jnp.clip(ki, 0, jnp.maximum(live - 1, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(q, kpool, vpool, tbl, kv_len, *,
                        interpret: bool = True):
-    """Block-table decode attention: gather each row's KV through its
-    block table, then run the folded flash-decode kernel (the gather is
-    the TPU-portable fallback for scalar-prefetch paged attention — the
-    kernel itself is unchanged, so paged and contiguous decode share one
-    code path and one numerics profile).
+    """Block-table decode attention, no gather: stream each row's live
+    physical blocks straight out of the pool.
 
     q: (B, Hq, hd); kpool/vpool: (num_blocks, block_tokens, Hkv, hd);
     tbl: (B, max_blocks) int32; kv_len: (B,) int32.  Returns (B, Hq, hd).
     """
-    k = gather_kv(kpool, tbl)
-    v = gather_kv(vpool, tbl)
-    return flash_decode(q, k, v, kv_len, block_k=block_k,
-                        interpret=interpret)
+    B, Hq, hd = q.shape
+    blk, Hkv = kpool.shape[1], kpool.shape[2]
+    max_blocks = tbl.shape[1]
+    G = Hq // Hkv
+    Gp = max(8, G)
+
+    qf = q.reshape(B, Hkv, G, hd).reshape(B * Hkv, G, hd)
+    if Gp != G:
+        qf = jnp.pad(qf, ((0, 0), (0, Gp - G), (0, 0)))
+
+    kernel = functools.partial(_paged_kernel, scale=1.0 / math.sqrt(hd),
+                               blk=blk, grid_k=max_blocks, hkv=Hkv)
+
+    def q_map(bh, ki, tbl_ref, lens_ref):
+        return (bh, 0, 0)
+
+    def kv_map(bh, ki, tbl_ref, lens_ref):
+        b = bh // Hkv
+        return (tbl_ref[b, _live_block(lens_ref, b, ki, blk)], 0,
+                bh % Hkv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * Hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, Gp, hd), q_map),
+            pl.BlockSpec((1, blk, 1, hd), kv_map),
+            pl.BlockSpec((1, blk, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, Gp, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, max_blocks * blk), jnp.float32),
+            pltpu.VMEM((max_blocks * blk, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, Gp, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tbl.astype(jnp.int32), kv_len.astype(jnp.int32), qf, kpool, vpool)
+    return out[:, :G, :].reshape(B, Hkv, G, hd).reshape(B, Hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# block-table MLA (absorbed-latent) decode kernel
+# ---------------------------------------------------------------------------
+
+def _paged_mla_kernel(tbl_ref, lens_ref,
+                      ql_ref, qr_ref, ckv_ref, kr_ref,
+                      o_ref,
+                      s_scr, ckv_scr,
+                      *, scale: float, blk: int, grid_k: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        s_scr[...] = jnp.full_like(s_scr, NEG_INF)
+        ckv_scr[...] = jnp.zeros_like(ckv_scr)
+
+    kvl = lens_ref[b]
+
+    @pl.when(ki * blk < kvl)
+    def _stash():
+        ql = ql_ref[0].astype(jnp.float32)          # (Hp, r)
+        qr = qr_ref[0].astype(jnp.float32)          # (Hp, rh)
+        ckv = ckv_ref[0].astype(jnp.float32)        # (blk, r)
+        kr = kr_ref[0].astype(jnp.float32)          # (blk, rh)
+        s = jax.lax.dot_general(ql, ckv, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s += jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        s *= scale                                   # (Hp, blk)
+
+        hp = ql.shape[0]
+        cols = ki * blk + jax.lax.broadcasted_iota(jnp.int32, (hp, blk), 1)
+        s = jnp.where(cols < kvl, s, NEG_INF)
+        pl.store(s_scr, (slice(None), pl.dslice(ki * blk, blk)), s)
+        pl.store(ckv_scr, (pl.dslice(ki * blk, blk), slice(None)), ckv)
+
+    @pl.when(ki == grid_k - 1)
+    def _finish():
+        # identical op order to layers.mla_attention: f32 softmax, probs
+        # quantized to the cache dtype, one latent-context contraction
+        probs = jax.nn.softmax(s_scr[...], axis=-1)
+        probs = probs.astype(ckv_ref.dtype).astype(jnp.float32)
+        o_ref[0] = jax.lax.dot_general(
+            probs, ckv_scr[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_flash_decode_mla(q_lat, q_rope, ckv_pool, krope_pool, tbl, kv_len,
+                           *, scale: float, interpret: bool = True):
+    """Absorbed-latent MLA decode over the paged compressed cache.
+
+    q_lat: (B, H, r) latent queries (q_nope @ Wk_b); q_rope: (B, H, rh);
+    ckv_pool: (num_blocks, block_tokens, r); krope_pool: (num_blocks,
+    block_tokens, rh); tbl: (B, max_blocks) int32; kv_len: (B,) int32.
+    Returns the latent context ctx = attn @ ckv, shape (B, H, r) — the
+    caller applies Wv_b / wo.  ``scale`` is 1/sqrt(nope_hd + rope_hd).
+    """
+    B, H, r = q_lat.shape
+    rh = q_rope.shape[-1]
+    blk = ckv_pool.shape[1]
+    max_blocks = tbl.shape[1]
+    Hp = max(8, H)
+
+    ql, qr = q_lat, q_rope
+    if Hp != H:
+        ql = jnp.pad(ql, ((0, 0), (0, Hp - H), (0, 0)))
+        qr = jnp.pad(qr, ((0, 0), (0, Hp - H), (0, 0)))
+
+    kernel = functools.partial(_paged_mla_kernel, scale=scale, blk=blk,
+                               grid_k=max_blocks)
+
+    def q_map(b, ki, tbl_ref, lens_ref):
+        return (b, 0, 0)
+
+    def kv_map(b, ki, tbl_ref, lens_ref):
+        return (tbl_ref[b, _live_block(lens_ref, b, ki, blk)], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, Hp, r), q_map),
+            pl.BlockSpec((1, Hp, rh), q_map),
+            pl.BlockSpec((1, blk, r), kv_map),
+            pl.BlockSpec((1, blk, rh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, Hp, r), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((Hp, max_blocks * blk), jnp.float32),
+            pltpu.VMEM((max_blocks * blk, r), jnp.float32),
+        ],
+    )
+    ctx = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hp, r), q_lat.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tbl.astype(jnp.int32), kv_len.astype(jnp.int32), ql, qr,
+      ckv_pool, krope_pool)
+    return ctx[:, :H, :]

@@ -27,15 +27,33 @@ def decode_reference(q, k, v, kv_len):
     return out.reshape(B, Hq, hd).astype(q.dtype)
 
 
+def _gather(pool, tbl):
+    nb, blk = pool.shape[:2]
+    flat = pool.reshape((nb * blk,) + pool.shape[2:])
+    idx = tbl[:, :, None] * blk + jnp.arange(blk)[None, None]
+    return flat[idx.reshape(tbl.shape[0], -1)]
+
+
 def paged_decode_reference(q, kpool, vpool, tbl, kv_len):
     """Oracle for block-table decode: gather per-row KV views from the
     physical pool (kpool/vpool: (num_blocks, block_tokens, Hkv, hd);
     tbl: (B, max_blocks) int32), then standard masked decode attention."""
-    nb, blk = kpool.shape[:2]
+    return decode_reference(q, _gather(kpool, tbl), _gather(vpool, tbl),
+                            kv_len)
 
-    def gather(pool):
-        flat = pool.reshape((nb * blk,) + pool.shape[2:])
-        idx = tbl[:, :, None] * blk + jnp.arange(blk)[None, None]
-        return flat[idx.reshape(tbl.shape[0], -1)]
 
-    return decode_reference(q, gather(kpool), gather(vpool), kv_len)
+def paged_mla_decode_reference(q_lat, q_rope, ckv_pool, krope_pool, tbl,
+                               kv_len, *, scale):
+    """Oracle for absorbed-latent MLA block-table decode.
+
+    q_lat: (B, H, r); q_rope: (B, H, rh); pools: (num_blocks, blk, r|rh);
+    returns the latent context ctx = softmax(scores) @ ckv, (B, H, r)."""
+    ckv = _gather(ckv_pool, tbl).astype(jnp.float32)     # (B, S, r)
+    kr = _gather(krope_pool, tbl).astype(jnp.float32)    # (B, S, rh)
+    s = jnp.einsum("bhr,bkr->bhk", q_lat.astype(jnp.float32), ckv)
+    s += jnp.einsum("bhr,bkr->bhk", q_rope.astype(jnp.float32), kr)
+    s *= scale
+    mask = jnp.arange(ckv.shape[1])[None] < kv_len[:, None]   # (B, S)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkr->bhr", probs, ckv).astype(q_lat.dtype)

@@ -18,6 +18,7 @@ current length (scalar int32, shared across the batch).
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -388,10 +389,20 @@ def _mla_attn(cfg, p, h, rope, mode, bcache, pos, tbl=None,
     if tbl is not None:
         ckv_p = _paged_write(bcache["ckv"], c_kv, tbl, pos)
         krope_p = _paged_write(bcache["krope"], k_rope, tbl, pos)
-        out = L.mla_attention(mp, cfg, q_nope, q_rope,
-                              _paged_view(ckv_p, tbl),
-                              _paged_view(krope_p, tbl),
-                              causal=False, q_offset=pos, kv_len=pos + 1)
+        if cfg.decode_impl == "flash_paged":
+            from repro.kernels.flash_decode.ops import paged_flash_decode_mla
+            B, Sq, H, _ = q_nope.shape
+            q_lat = jnp.einsum("bqhn,hrn->bqhr", q_nope, mp["wk_b"])
+            ctx = paged_flash_decode_mla(
+                q_lat[:, 0], q_rope[:, 0], ckv_p, krope_p, tbl, pos + 1,
+                scale=1.0 / math.sqrt(cfg.nope_head_dim + cfg.rope_head_dim))
+            out = jnp.einsum("bhr,hrv->bhv", ctx, mp["wv_b"])
+            out = (out.reshape(B, H * cfg.v_head_dim) @ mp["wo"])[:, None]
+        else:
+            out = L.mla_attention(mp, cfg, q_nope, q_rope,
+                                  _paged_view(ckv_p, tbl),
+                                  _paged_view(krope_p, tbl),
+                                  causal=False, q_offset=pos, kv_len=pos + 1)
         return h + out, {"ckv": ckv_p, "krope": krope_p}
     if cfg.decode_impl == "shardmap" and jnp.ndim(pos) == 0:
         from repro.models import smdec

@@ -275,6 +275,8 @@ class ARLane(BackendLane):
         sched.prefill_tokens = sched.cached_tokens = 0
         sched.preempted = 0
         sched.ttft_ewma = 0.0
+        sched.ttft_samples = 0
+        sched.prefill.prefills = 0
         if getattr(sched, "paged", False):
             sched.pool.stats = PoolStats()
         sched._finished.clear()
@@ -476,14 +478,27 @@ class LocalFleet:
                  batch: int = 4, max_seq: int = 160, gen_tokens: int = 16,
                  moe_impl: str = "ep", seed: int = 0, warmup: bool = True,
                  model_axis: int = 1, paged: object = "auto",
-                 block_tokens: int = 16, kv_blocks: Optional[int] = None):
+                 block_tokens: int = 16, kv_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = 1,
+                 prefill_lookahead: int = 0,
+                 decode_impl: Optional[str] = None):
         """``paged`` selects the KV layout per member: "auto" (default)
         pages every arch the paged cache supports (pure attention/MLA
         stacks — SSM and cross-attention members stay contiguous), True
         requires it (raises for unsupported archs), False keeps the
         contiguous PR-2 cache everywhere.  ``kv_blocks`` overrides the
         physical pool size (default: one full table per slot + headroom
-        for retained prefix blocks)."""
+        for retained prefix blocks).
+
+        Disaggregated prefill/decode knobs: ``prefill_chunk`` caps the
+        tokens per paged admission-prefill call (None = whole suffix in
+        one call), ``prefill_budget`` caps prefill calls interleaved per
+        decode step while the batch is live (None = unbounded, the legacy
+        admit-everything cadence), ``prefill_lookahead`` lets the prefill
+        worker run that many admissions ahead of free slots.
+        ``decode_impl`` overrides the model's decode attention path
+        (e.g. "flash_paged" for the block-table Pallas decode kernel)."""
         self.mesh = make_host_mesh(model=model_axis)
         self.model_axis = model_axis
         self.gen_tokens = gen_tokens
@@ -504,7 +519,11 @@ class LocalFleet:
         # members later with identical shapes/seeding
         self._build = dict(reduced=reduced, batch=batch, max_seq=max_seq,
                            moe_impl=moe_impl, paged=paged,
-                           block_tokens=block_tokens, kv_blocks=kv_blocks)
+                           block_tokens=block_tokens, kv_blocks=kv_blocks,
+                           decode_impl=decode_impl)
+        self._sched_opts = dict(prefill_chunk=prefill_chunk,
+                                prefill_budget=prefill_budget,
+                                prefill_lookahead=prefill_lookahead)
         self.archs = list(archs)         # base membership: never scaled below
         for arch in archs:
             self.add_member(arch, warmup=warmup)
@@ -522,6 +541,8 @@ class LocalFleet:
                                               **DIFFUSION_ARCHS[arch])
             return member, lane
         cfg = get_reduced(arch) if reduced else get_config(arch)
+        if b["decode_impl"] is not None:
+            cfg = cfg.replace(decode_impl=b["decode_impl"])
         if cfg.n_experts:
             # serving is dropless: capacity >= the per-call token
             # count, so expert keep/drop never depends on which
@@ -626,7 +647,7 @@ class LocalFleet:
         return DecodeScheduler(
             m, gen_tokens=self.gen_tokens,
             init_cache_fn=init_cache,
-            make_cross_fn=make_cross)
+            make_cross_fn=make_cross, **self._sched_opts)
 
     # -- generation ---------------------------------------------------------
 

@@ -152,5 +152,19 @@ class AsyncFrontend:
                     if not fut.done():
                         fut.set_exception(e)
                 continue
+            # a router that returns a short (or long) list must not leave
+            # the unmatched futures hanging forever — deliver what can be
+            # matched positionally, fail the rest loudly
+            if len(pairs) != len(batch):
+                METRICS.inc("frontend_batch_mismatch_total")
+                err = RuntimeError(
+                    f"route_batch returned {len(pairs)} responses for "
+                    f"{len(batch)} requests")
+                for (_, fut), pair in zip(batch, pairs):
+                    fut.set_result(pair)
+                for _, fut in batch[len(pairs):]:
+                    if not fut.done():
+                        fut.set_exception(err)
+                continue
             for (_, fut), pair in zip(batch, pairs):
                 fut.set_result(pair)

@@ -70,7 +70,10 @@ def fleet_probe(fleet) -> Callable[[], EngineLoad]:
     def probe() -> EngineLoad:
         load = EngineLoad()
         for arch, sched in getattr(fleet, "schedulers", {}).items():
-            load.queue_depth += len(sched.queue)
+            # queue_depth counts prefilling / prefilled-waiting requests
+            # too, not just the raw arrival queue
+            load.queue_depth += getattr(sched, "queue_depth",
+                                        len(sched.queue))
             load.active_slots += sum(1 for a in sched.active
                                      if a is not None)
             load.slots += sched.slots
@@ -78,8 +81,12 @@ def fleet_probe(fleet) -> Callable[[], EngineLoad]:
             if pool is not None:
                 load.free_blocks += pool.free_blocks
                 load.total_blocks += pool.num_blocks
-            load.ttft_ewma_ms = max(load.ttft_ewma_ms,
-                                    getattr(sched, "ttft_ewma", 0.0))
+            # ttft_probe_ms floors the served EWMA by the oldest waiting
+            # request's age: a stalled lane reads as stalled NOW, not
+            # only after the stalled request finally finishes
+            ttft = getattr(sched, "ttft_probe_ms",
+                           getattr(sched, "ttft_ewma", 0.0))
+            load.ttft_ewma_ms = max(load.ttft_ewma_ms, ttft)
         return load
     return probe
 
@@ -206,7 +213,7 @@ class FleetAutoscaler:
             active = sum(1 for a in sched.active if a is not None)
             stats[arch] = {
                 "occupancy": active / sched.slots if sched.slots else 0.0,
-                "queue": len(sched.queue),
+                "queue": getattr(sched, "queue_depth", len(sched.queue)),
                 "slots": sched.slots,
             }
         return stats

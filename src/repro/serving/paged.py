@@ -89,6 +89,24 @@ class BlockPool:
         with self._lock:
             return sum(b.ref for b in self._blocks)
 
+    def releasable(self, row: Sequence[int]) -> int:
+        """How many of ``row``'s blocks would actually free up if the row
+        released them now — blocks shared with another row (``ref > 1``)
+        stay pinned.  The preemption precheck uses this to decide whether
+        parking a victim can possibly make an admission fit."""
+        with self._lock:
+            return sum(1 for bid in row
+                       if bid != TRASH_BLOCK and self._blocks[bid].ref == 1)
+
+    def register(self, row: Sequence[int], hashes: Sequence[int]) -> None:
+        """Register chain hashes for a row's (already written) full blocks
+        so later admissions can prefix-match them.  Called at PREFILL
+        COMPLETION, not admission: under chunked prefill a block's hash
+        must not be discoverable before its KV content exists."""
+        with self._lock:
+            for bid, h in zip(row, hashes):
+                self._register_locked(bid, h)
+
     def match(self, hashes: Sequence[int]) -> int:
         """Number of leading full blocks already resident (chain hashes
         make any hit a prefix hit, so a simple count suffices)."""

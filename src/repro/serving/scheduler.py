@@ -1,44 +1,54 @@
-"""Continuous-batching decode scheduler (slot-based, vLLM-style).
+"""Disaggregated prefill/decode continuous-batching scheduler.
 
 Each fleet member owns one :class:`DecodeScheduler` holding a persistent
-decode state over a fixed pool of batch slots:
+decode state over a fixed pool of batch slots, plus a :class:`PrefillWorker`
+— the admission-side half of the lane:
 
-* a shared KV/SSM cache of shape ``(slots, max_seq, ...)`` (the KV pool),
-* per-slot prompt length, absolute position, and done mask,
-* a FIFO of submitted-but-not-admitted requests.
-
-``submit()`` enqueues a request; ``step()`` first *admits* queued requests
-into free slots — a single-row, length-exact (or length-bucketed) prefill
-merged into the in-flight cache — then runs ONE batched decode step over
-all slots with per-row positions.  Newly arrived prompts therefore join
-the decode batch at the next step boundary instead of waiting for a full
-``generate()`` prefill+decode cycle, which is what drives time-to-first-
-token down under staggered arrivals.
+* the decode worker runs ONE batched decode step per ``step()`` over all
+  slots with per-row positions (KV writes, rope phases and attention masks
+  are per-row: ``model.decode_rows``);
+* the prefill worker runs admission prefills on its OWN cadence: at most
+  ``prefill_budget`` jitted prefill calls per scheduler step while decode
+  rows are live (unbounded while the engine is idle — nothing competes for
+  the step), each optionally CHUNKED to ``prefill_chunk`` tokens.  Paged
+  prefills write KV blocks straight into the shared :class:`BlockPool`
+  under a row-private block table; when the prefill completes, the block
+  table is handed to the decode worker (``ready`` queue → slot binding).
+  A 64-token prompt admission therefore no longer stalls the in-flight
+  decode batch for its whole prefill — decode takes a step between chunks.
 
 Correctness notes:
 
-* Rows decode from their OWN last real token: per-slot ``pos`` feeds the
-  per-row position vector in ``cache["pos"]``, so KV writes, rope phases
-  and attention masks are per-row (`model.decode_step`).
 * Admission prefill is right-padded to a length bucket but samples at the
   row's last real position (``lens``-aware prefill); pad garbage beyond
   the prompt is overwritten by decode steps before it ever enters a mask.
   Architectures with recurrent (SSM) state use EXACT lengths instead —
   a padded suffix would corrupt the carried state.
+* Chunked paged prefill is token-exact vs the monolithic path: the first
+  chunk (start == 0) runs local causal attention (bit-identical to the
+  contiguous prefill of the same tokens), later chunks take the
+  gathered-view suffix program with per-row start offsets — the same
+  program PR 6 proved token-exact for cached-prefix suffixes — and
+  serving MoE is dropless, so expert keep/drop never depends on how many
+  tokens share a prefill call.  Intermediate chunk samples are discarded;
+  only the final chunk's sampled token becomes the first output token.
+* Block hashes register at prefill COMPLETION (``BlockPool.register``),
+  never at admission: under chunked prefill a concurrent admission must
+  not prefix-match blocks whose KV has not been written yet.
 * The decode batch shape is fixed, so a freed slot still occupies a lane
   of the batched step — but it is MASKED out: its block-table row points
   at the trash block (paged) / its own overwritten row (contiguous), its
-  sampled token is discarded and asserted never to reach a sequence, and
-  ``slot_steps`` counts live rows only (``masked_slot_steps`` tracks the
-  dead lanes).
+  sampled token is discarded and asserted never to reach a sequence.
 
-Paged mode (``member.paged``): the cache is a block pool
-(``model.init_paged_cache``) plus a host-side :class:`BlockPool`
-allocator.  Admission hashes the prompt into chained token blocks,
-maps every already-resident block into the new row's table (ref-counted,
-COW when a shared block must be written) and prefills ONLY the unmatched
-suffix — shared system prompts and multi-turn histories prefill once per
-prefix, not once per request.
+Preemption (QoS): a prefilled arrival that outranks the lowest-priority
+running row evicts it at slot-binding time — by then the arrival's blocks
+are already resident, so the victim can never be parked for an admission
+that then fails.  When the POOL (not the slots) is the bottleneck, the
+prefill worker parks a strictly-lower-priority victim only after checking
+that the victim's releasable blocks (shared blocks stay pinned) actually
+make the admission fit — a victim never loses decode progress for
+nothing.  Parked rows release their blocks WITH chain hashes (matchable
+for resume) and re-enter the queue ahead of same-priority waiters.
 """
 
 from __future__ import annotations
@@ -102,17 +112,238 @@ class SequenceState:
         return (self.t_done - self.t_first) * 1e3 / (n - 1)
 
 
+@dataclass
+class PrefillJob:
+    """One admission prefill in flight (or completed, awaiting a slot).
+
+    Paged jobs own their block list/table from ``_begin`` until slot
+    binding hands both to the decode worker; contiguous jobs carry the
+    prefilled batch-1 row cache to merge at binding."""
+    seq: SequenceState
+    plen: int = 0                   # row position after the full prefill
+    first: Optional[int] = None     # sampled first token (set at completion)
+    # paged state
+    row: Optional[List[int]] = None
+    trow: Optional[np.ndarray] = None
+    start: int = 0                  # next prompt index to prefill
+    hashes: List[int] = field(default_factory=list)
+    matched: int = 0
+    # contiguous state
+    row_cache: Optional[object] = None
+
+    @property
+    def done(self) -> bool:
+        return self.first is not None
+
+
+class PrefillWorker:
+    """Admission-side worker: turns queued requests into prefilled rows.
+
+    ``step()`` runs at most ONE jitted prefill call (one chunk), so the
+    scheduler can interleave prefill progress with decode steps at a
+    controlled budget.  Completed jobs land in ``ready`` (priority
+    ordered) for the decode worker to bind into slots.
+    """
+
+    def __init__(self, sched: "DecodeScheduler", *,
+                 chunk: Optional[int] = None, lookahead: int = 0):
+        self.sched = sched
+        self.chunk = chunk          # paged chunk width (None = whole suffix)
+        self.lookahead = lookahead  # prefill-ahead depth when slots are full
+        self.current: Optional[PrefillJob] = None
+        self.ready: Deque[PrefillJob] = deque()
+        self.prefills = 0           # jitted prefill calls issued
+
+    @property
+    def backlog(self) -> int:
+        """Requests prefilling or prefilled but not yet decoding."""
+        return (1 if self.current is not None else 0) + len(self.ready)
+
+    def oldest_wait_s(self, now: float) -> float:
+        """Age of the oldest request that has not produced a first token
+        (queued, mid-prefill, or parked awaiting resume)."""
+        oldest = 0.0
+        for seq in self.sched.queue:
+            oldest = max(oldest, now - seq.t_submit)
+        if self.current is not None:
+            oldest = max(oldest, now - self.current.seq.t_submit)
+        for job in self.ready:
+            if job.seq.t_first == 0.0:
+                oldest = max(oldest, now - job.seq.t_submit)
+        return oldest
+
+    # -- one unit of prefill work -------------------------------------------
+
+    def step(self) -> bool:
+        """Run one jitted prefill call (start a job if none is current).
+        Returns False when there is nothing runnable (empty queue, slot/
+        lookahead gate, or pool stall)."""
+        s = self.sched
+        if self.current is None:
+            if not s.queue or not self._may_begin():
+                return False
+            job = self._begin(s.queue[0])
+            if job is None:          # pool cannot hold the row: retry later
+                METRICS.inc("paged_admit_stall_total", arch=s.m.arch)
+                return False
+            s.queue.popleft()
+            self.current = job
+        self._chunk_step(self.current)
+        self.prefills += 1
+        if self.current.done:
+            job, self.current = self.current, None
+            self._complete(job)
+        return True
+
+    def _may_begin(self) -> bool:
+        """Start the head request's prefill only if its finished row will
+        have somewhere to go: a free slot, a preemptable lower-priority
+        row, or lookahead headroom (prefill-ahead while slots drain)."""
+        s = self.sched
+        if None in s.active:
+            return True
+        head = s.queue[0]
+        live = [x for x in s.active if x is not None]
+        if live and head.priority > min(x.priority for x in live):
+            return True              # binding will preempt the victim
+        return len(self.ready) < self.lookahead
+
+    def _begin(self, seq: SequenceState) -> Optional[PrefillJob]:
+        s, m = self.sched, self.sched.m
+        # over-long prompts keep the TAIL on BOTH cache layouts: generation
+        # needs the newest context (the contiguous path used to keep the
+        # head, silently diverging from the paged path)
+        seq.ids = seq.ids[-m.prompt_cap:]
+        n = len(seq.ids)
+        if not s.paged:
+            return PrefillJob(seq=seq, plen=n)
+        blk = m.block_tokens
+        hashes = chain_hashes(seq.ids.tolist(), blk)
+        matched = s.pool.match(hashes)
+        # remaining budget, not max_new: a resumed row's folded output is
+        # already inside ``n`` and must not inflate the allocation
+        remaining = seq.max_new - len(seq.out)
+        total = max(matched, min(s.max_blocks,
+                                 -(-(n + remaining + 1) // blk)))
+        if total - matched > s.pool.free_blocks:
+            # pool exhausted: park a strictly-lower-priority victim ONLY
+            # if its actually-releasable blocks make this admission fit —
+            # otherwise the victim would lose its decode progress for an
+            # admission that still stalls
+            victim = s._preempt_candidate(seq)
+            if victim is None:
+                return None
+            freed = s.pool.releasable(s.row_blocks[victim.slot] or [])
+            if total - matched > s.pool.free_blocks + freed:
+                return None
+            s._park(victim)
+            matched = s.pool.match(hashes)   # victim blocks now matchable
+            total = max(matched, min(s.max_blocks,
+                                     -(-(n + remaining + 1) // blk)))
+        row = s.pool.admit(hashes[:matched], total)
+        if row is None:
+            return None
+        start = min(matched * blk, n - 1)    # >= 1 suffix token to sample
+        # blocks freshly allocated for THIS row are ours to write; matched
+        # blocks overlapping the write range (the fully-cached tail) must
+        # be copied first
+        fresh = set(row[matched:])
+        for src, dst in s.pool.ensure_writable(row, start // blk,
+                                               exempt=fresh):
+            s.cache = m.copy_block(s.cache, jnp.asarray(src, jnp.int32),
+                                   jnp.asarray(dst, jnp.int32))
+        trow = np.zeros((s.max_blocks,), np.int32)
+        trow[:len(row)] = row
+        seq.cached_tokens = start
+        seq.prefill_tokens = 0
+        s.cached_tokens += start
+        s.pool.stats.cached_tokens += start
+        return PrefillJob(seq=seq, plen=n, row=row, trow=trow, start=start,
+                          hashes=hashes, matched=matched)
+
+    def _chunk_step(self, job: PrefillJob):
+        s, m = self.sched, self.sched.m
+        seq = job.seq
+        if not s.paged:
+            # contiguous: one monolithic bucketed prefill into a fresh
+            # batch-1 cache, merged into the shared cache at binding
+            n = job.plen
+            width = bucket_len(n, m.prompt_cap, exact=m.exact_prefill)
+            toks = np.zeros((1, width), np.int32)
+            toks[0, :n] = seq.ids
+            lens = np.asarray([n], np.int32)
+            args = [m.params, jnp.asarray(toks), jnp.asarray(lens),
+                    s._row_cache0]
+            if s._make_cross is not None:
+                args.append(seq.cross if seq.cross is not None
+                            else s._make_cross(1))
+            nxt, job.row_cache = m.prefill_row(*args)
+            job.first = int(np.asarray(nxt)[0])
+            seq.prefill_tokens = n
+            s.prefill_tokens += n
+            return
+        n = job.plen
+        clen = n - job.start
+        if self.chunk is not None:
+            clen = min(clen, self.chunk)
+        width = bucket_len(clen, m.prompt_cap, exact=False)
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :clen] = seq.ids[job.start:job.start + clen]
+        lens = np.asarray([clen], np.int32)
+        starts = np.asarray([job.start], np.int32)
+        fn = m.prefill_paged_fresh if job.start == 0 \
+            else m.prefill_paged_suffix
+        nxt, s.cache = fn(m.params, jnp.asarray(toks), jnp.asarray(lens),
+                          jnp.asarray(starts), jnp.asarray(job.trow[None]),
+                          s.cache)
+        job.start += clen
+        seq.prefill_tokens += clen
+        s.prefill_tokens += clen
+        s.pool.stats.prefill_tokens += clen
+        if job.start >= n:
+            # intermediate chunk samples are discarded; the final chunk
+            # samples at the prompt's true last position
+            job.first = int(np.asarray(nxt)[0])
+
+    def _complete(self, job: PrefillJob):
+        s = self.sched
+        seq = job.seq
+        if seq.t_first == 0.0:       # resumes keep their original TTFT
+            seq.t_first = time.perf_counter()
+            s._note_ttft(seq.ttft_ms)
+        seq.out.append(job.first)
+        if s.paged:
+            # KV for every full prompt block is now written: make the
+            # blocks discoverable for prefix matching
+            s.pool.register(job.row[:len(job.hashes)], job.hashes)
+        # priority-ordered handoff (FIFO within a class; parked resumes
+        # ahead of same-priority, mirroring _enqueue)
+        q = self.ready
+        p, resumed = seq.priority, seq.parks > 0
+        i = len(q)
+        while i > 0 and (q[i - 1].seq.priority < p or
+                         (resumed and q[i - 1].seq.priority == p)):
+            i -= 1
+        if i == len(q):
+            q.append(job)
+        else:
+            q.insert(i, job)
+
+
 class DecodeScheduler:
     """Slot-based continuous-batching scheduler for one fleet member.
 
     ``member`` supplies the model state and jitted steps; the scheduler
-    owns the persistent decode cache, the slot bookkeeping, and the
-    admission queue.  Not thread-safe by itself — :class:`LocalFleet`
-    serializes access (the async front-end drives it from one thread).
+    owns the persistent decode cache, the slot bookkeeping, the admission
+    queue, and the prefill worker.  Not thread-safe by itself —
+    :class:`LocalFleet` serializes access (the async front-end drives it
+    from one thread).
     """
 
     def __init__(self, member, *, gen_tokens: int, init_cache_fn,
-                 make_cross_fn=None):
+                 make_cross_fn=None, prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = 1,
+                 prefill_lookahead: int = 0):
         self.m = member
         self.gen_tokens = gen_tokens
         self.slots = member.batch
@@ -134,6 +365,9 @@ class DecodeScheduler:
         self.last_tok = np.zeros((self.slots,), np.int32)
         self.active: List[Optional[SequenceState]] = [None] * self.slots
         self.queue: Deque[SequenceState] = deque()
+        self.prefill = PrefillWorker(self, chunk=prefill_chunk,
+                                     lookahead=prefill_lookahead)
+        self.prefill_budget = prefill_budget
         self._rid = 0
         # bounded results side-table for result()-style consumers; the
         # primary delivery path is step()'s return value, so this must
@@ -149,6 +383,7 @@ class DecodeScheduler:
         self.cached_tokens = 0           # prompt tokens served from cache
         self.preempted = 0               # rows parked by priority preemption
         self.ttft_ewma = 0.0             # EWMA TTFT ms (overload detector)
+        self.ttft_samples = 0            # EWMA sample count (0 == no data)
 
     # -- public API ---------------------------------------------------------
 
@@ -194,10 +429,35 @@ class DecodeScheduler:
 
     @property
     def pending(self) -> int:
-        return len(self.queue) + sum(s is not None for s in self.active)
+        return len(self.queue) + self.prefill.backlog + \
+            sum(s is not None for s in self.active)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests not yet decoding (queued, prefilling, or awaiting a
+        slot) — the overload detector's queue-pressure input."""
+        return len(self.queue) + self.prefill.backlog
+
+    @property
+    def ttft_probe_ms(self) -> float:
+        """TTFT as the overload detector should see it: the served EWMA,
+        floored by the age of the oldest request still WAITING for its
+        first token — a prefill-induced stall (or a parked resume) is
+        visible the moment it happens instead of only after the stalled
+        request finally finishes."""
+        waiting = self.prefill.oldest_wait_s(time.perf_counter()) * 1e3
+        return max(self.ttft_ewma, waiting)
+
+    def _note_ttft(self, ms: float):
+        # counter, not an ``== 0.0`` sentinel: a genuinely-zero sample
+        # must not reset the average
+        self.ttft_ewma = ms if self.ttft_samples == 0 else \
+            0.8 * self.ttft_ewma + 0.2 * ms
+        self.ttft_samples += 1
 
     def step(self) -> List[SequenceState]:
-        """Admit queued requests into free slots, then run one decode step
+        """Advance the lane: bind ready prefills into free slots, run the
+        prefill worker within its budget, then ONE batched decode step
         over the in-flight batch.  Returns sequences finished this step."""
         done: List[SequenceState] = []
         self._admit(done)
@@ -209,9 +469,6 @@ class DecodeScheduler:
             while len(self._finished) > self._finished_cap:
                 self._finished.popitem(last=False)
             METRICS.observe("fleet_ttft_ms", seq.ttft_ms, arch=self.m.arch)
-            # EWMA TTFT feeds the overload detector's busy/overload grade
-            self.ttft_ewma = seq.ttft_ms if self.ttft_ewma == 0.0 else \
-                0.8 * self.ttft_ewma + 0.2 * seq.ttft_ms
         return done
 
     def drain(self) -> List[SequenceState]:
@@ -227,25 +484,46 @@ class DecodeScheduler:
     # -- internals ----------------------------------------------------------
 
     def _admit(self, done: List[SequenceState]):
+        """Prefill-worker budget + ready-row slot binding.
+
+        While decode rows are live, at most ``prefill_budget`` jitted
+        prefill calls run per step — a long prompt's chunks interleave
+        with decode steps instead of stalling them.  With the engine idle
+        the budget is unbounded: prefilling back-to-back is exactly what
+        minimizes TTFT when nothing else needs the step."""
+        w = self.prefill
+        self._bind_ready(done)
+        live = any(s is not None for s in self.active)
+        budget = self.prefill_budget if live else None
+        if budget is None:       # idle engine / no cap: prefill flat out
+            budget = float("inf")
+        while budget > 0 and w.step():
+            budget -= 1
+            self._bind_ready(done)
+
+    def _bind_ready(self, done: List[SequenceState]):
+        """Hand completed prefills to the decode worker: assign a slot,
+        point it at the prefilled KV (block table / merged row cache),
+        seed pos/last_tok.  Preemption fires here when a ready row
+        outranks the lowest-priority running row — the arrival's KV is
+        already resident, so the victim is never parked speculatively."""
         m = self.m
-        while self.queue:
-            if None not in self.active and not self._try_preempt():
-                break
+        w = self.prefill
+        while w.ready:
+            if None not in self.active:
+                if not self._try_preempt_for(w.ready[0].seq):
+                    break
             slot = self.active.index(None)
-            seq = self.queue[0]
-            res = (self._prefill_paged(seq, slot) if self.paged
-                   else self._prefill_contiguous(seq, slot))
-            if res is None:          # block pool exhausted: retry next step
-                METRICS.inc("paged_admit_stall_total", arch=m.arch)
-                break
-            self.queue.popleft()
-            first, plen = res
+            job = w.ready.popleft()
+            seq = job.seq
+            if self.paged:
+                self.row_blocks[slot] = job.row
+                self.tbl[slot] = job.trow
+            else:
+                self.cache = m.merge_row(self.cache, job.row_cache, slot)
             seq.slot = slot
-            if seq.t_first == 0.0:   # resumes keep their original TTFT
-                seq.t_first = time.perf_counter()
-            seq.out.append(first)
-            self.pos[slot] = plen
-            self.last_tok[slot] = first
+            self.pos[slot] = job.plen
+            self.last_tok[slot] = job.first
             self.active[slot] = seq
             self.admitted += 1
             if seq.parks == 0:       # a resume is not a new prompt
@@ -254,18 +532,21 @@ class DecodeScheduler:
             if len(seq.out) >= seq.max_new:
                 self._finish(seq, done)
 
-    def _try_preempt(self) -> bool:
-        """Evict the lowest-priority in-flight row to make room for a
-        strictly higher-priority queued arrival.  Victim choice: lowest
-        priority, newest submission breaking ties (it has done the least
-        aged work).  Never fires between equal priorities — with no SLO
-        config every priority is 0 and this is a no-op."""
-        head = self.queue[0]
+    def _preempt_candidate(self, seq: SequenceState) \
+            -> Optional[SequenceState]:
+        """Lowest-priority in-flight row STRICTLY below ``seq`` (newest
+        submission breaking ties — it has done the least aged work), or
+        None.  Never fires between equal priorities — with no SLO config
+        every priority is 0 and preemption is a no-op."""
         live = [s for s in self.active if s is not None]
         if not live:
-            return False
+            return None
         victim = min(live, key=lambda s: (s.priority, -s.t_submit))
-        if victim.priority >= head.priority:
+        return victim if victim.priority < seq.priority else None
+
+    def _try_preempt_for(self, seq: SequenceState) -> bool:
+        victim = self._preempt_candidate(seq)
+        if victim is None:
             return False
         self._park(victim)
         return True
@@ -304,84 +585,6 @@ class DecodeScheduler:
         METRICS.inc("preemptions_total", arch=self.m.arch,
                     slo=seq.slo or "none")
         self._enqueue(seq, requeue=True)
-
-    def _prefill_contiguous(self, seq: SequenceState, slot: int):
-        """Single-row bucketed prefill into a fresh batch-1 cache, merged
-        into the shared contiguous cache at ``slot``."""
-        m = self.m
-        n = len(seq.ids)
-        width = bucket_len(n, m.prompt_cap, exact=m.exact_prefill)
-        toks = np.zeros((1, width), np.int32)
-        toks[0, :min(n, width)] = seq.ids[:width]
-        lens = np.asarray([min(n, width)], np.int32)
-        args = [m.params, jnp.asarray(toks), jnp.asarray(lens),
-                self._row_cache0]
-        if self._make_cross is not None:
-            args.append(seq.cross if seq.cross is not None
-                        else self._make_cross(1))
-        nxt, row_cache = m.prefill_row(*args)
-        self.cache = m.merge_row(self.cache, row_cache, slot)
-        seq.prefill_tokens = int(lens[0])
-        self.prefill_tokens += seq.prefill_tokens
-        return int(np.asarray(nxt)[0]), int(lens[0])
-
-    def _prefill_paged(self, seq: SequenceState, slot: int):
-        """Prefix-cache-aware paged admission.
-
-        Chain-hash the prompt's full token blocks, map every resident
-        block into this row's block table (ref-counting them), COW any
-        to-be-written shared block, and prefill only the unmatched
-        suffix.  A fully-cached prompt recomputes exactly ONE token (the
-        last — its logits are needed to sample) and zero blocks.
-        Returns ``None`` (request stays queued) if the pool cannot hold
-        the row yet.
-        """
-        m = self.m
-        blk = m.block_tokens
-        ids = seq.ids = seq.ids[-m.prompt_cap:]  # keep the tail (hash_tokens)
-        n = len(ids)
-        hashes = chain_hashes(ids.tolist(), blk)
-        matched = self.pool.match(hashes)
-        start = min(matched * blk, n - 1)     # >= 1 suffix token to sample
-        suffix = n - start
-        # remaining budget, not max_new: a resumed row's folded output is
-        # already inside ``n`` and must not inflate the allocation
-        remaining = seq.max_new - len(seq.out)
-        total = max(matched, min(self.max_blocks,
-                                 -(-(n + remaining + 1) // blk)))
-        row = self.pool.admit(hashes[:matched], total,
-                              new_hashes=hashes[matched:])
-        if row is None:
-            return None
-        # blocks freshly allocated for THIS row are ours to write even if
-        # eagerly hash-registered; matched blocks overlapping the write
-        # range (the fully-cached tail) must be copied first
-        fresh = set(row[matched:])
-        for src, dst in self.pool.ensure_writable(row, start // blk,
-                                                  exempt=fresh):
-            self.cache = m.copy_block(self.cache, jnp.asarray(src, jnp.int32),
-                                      jnp.asarray(dst, jnp.int32))
-        self.row_blocks[slot] = row
-        trow = np.zeros((self.max_blocks,), np.int32)
-        trow[:len(row)] = row
-        self.tbl[slot] = trow
-        width = bucket_len(suffix, m.prompt_cap, exact=False)
-        toks = np.zeros((1, width), np.int32)
-        toks[0, :suffix] = ids[start:]
-        lens = np.asarray([suffix], np.int32)
-        starts = np.asarray([start], np.int32)
-        fn = m.prefill_paged_fresh if start == 0 else m.prefill_paged_suffix
-        nxt, self.cache = fn(m.params, jnp.asarray(toks), jnp.asarray(lens),
-                             jnp.asarray(starts), jnp.asarray(trow[None]),
-                             self.cache)
-        seq.cached_tokens = start
-        seq.prefill_tokens = suffix
-        self.cached_tokens += start
-        self.prefill_tokens += suffix
-        st = self.pool.stats
-        st.cached_tokens += start
-        st.prefill_tokens += suffix
-        return int(np.asarray(nxt)[0]), n
 
     def _decode(self, live: List[int], done: List[SequenceState]):
         m = self.m
