@@ -7,7 +7,7 @@ requests, inspect signals/decisions/traces, and emit deployment targets.
 import sys
 sys.path.insert(0, "src")
 
-from repro.core.dsl import compile_source, decompile, emit_crd, emit_yaml
+from repro.core.dsl import compile_source, decompile, emit_crd
 from repro.core.router import SemanticRouter
 from repro.core.types import Message, Request
 

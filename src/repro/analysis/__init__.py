@@ -1,0 +1,34 @@
+"""repro.analysis — static analysis plane (ISSUE 9).
+
+Two halves:
+
+* **Policy verifier** (:mod:`repro.analysis.bdd`,
+  :mod:`repro.analysis.policy_verify`): a hash-consed ROBDD engine plus a
+  Level-4 semantic pass over compiled router policies — unsatisfiable
+  decisions, priority shadowing, same-priority overlaps with differing
+  pools, coverage holes, model/endpoint/lane reference integrity, SLO
+  graph checks and plugin-chain sanity, each reported as a typed
+  :class:`~repro.core.dsl.ast_nodes.Diagnostic` carrying a concrete
+  witness assignment extracted from the BDD.
+
+* **Engine lint** (:mod:`repro.analysis.jaxpr_lint`): reusable static
+  passes over jitted functions — intermediate-size budgets, host-callback
+  bans, and a jit-cache-miss guard for recompile regressions.
+
+CLI: ``python -m repro.analysis examples/policies [--strict]``.
+"""
+
+from repro.analysis.bdd import BDD, at_most_one, rule_to_bdd
+from repro.analysis.jaxpr_lint import (LintFinding, RecompileGuard,
+                                       jit_cache_size, lint_fn, lint_jaxpr,
+                                       walk_eqns)
+from repro.analysis.policy_verify import (derive_mutex_groups, is_demo_source,
+                                          verify_config, verify_program)
+
+__all__ = [
+    "BDD", "at_most_one", "rule_to_bdd",
+    "LintFinding", "RecompileGuard", "jit_cache_size", "lint_fn",
+    "lint_jaxpr", "walk_eqns",
+    "derive_mutex_groups", "is_demo_source", "verify_config",
+    "verify_program",
+]

@@ -1,0 +1,171 @@
+"""Engine lint plane: static passes over jitted functions.
+
+PR 8 proved the paged flash-decode kernel never materializes the
+gathered ``(B, max_blocks*block_tokens, ...)`` KV view with a one-off
+jaxpr walk inside a test.  This module promotes that walk into a
+reusable lint for ANY hot-path jittable:
+
+* :func:`lint_fn` / :func:`lint_jaxpr` — trace a function, walk every
+  equation (recursing into nested jaxprs: pjit bodies, scans, conds,
+  custom-call branches) and report
+
+  - **materialized-intermediate**: an output aval above an element
+    budget (catches accidental gathers/broadcasts in a path that is
+    supposed to stream);
+  - **banned-shape**: an output whose leading dims match a caller-
+    supplied blacklist (the PR-8 gathered-KV assertion, generalized);
+  - **host-callback**: ``pure_callback``/``io_callback``/``debug_*``
+    primitives in a hot path (each one is a device->host sync).
+
+* :func:`jit_cache_size` / :class:`RecompileGuard` — count jit cache
+  entries so tests can assert that warmed-up shape buckets never
+  recompile (an unexpected cache miss in the serving loop is a
+  multi-second stall at request time).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = ["LintFinding", "walk_eqns", "lint_jaxpr", "lint_fn",
+           "jit_cache_size", "RecompileGuard", "HOST_CALLBACK_PRIMITIVES"]
+
+# primitives that round-trip through the host (or serialize a print):
+# never acceptable inside a serving hot path
+HOST_CALLBACK_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "debug_print",
+    "callback", "host_callback_call", "outside_call",
+})
+
+
+@dataclass
+class LintFinding:
+    rule: str                       # materialized-intermediate |
+    #                                 banned-shape | host-callback
+    message: str
+    primitive: str = ""
+    shape: Tuple[int, ...] = ()
+
+    def __str__(self):
+        return f"[{self.rule}] {self.message}"
+
+
+def _nested_jaxprs(value) -> Iterator[Any]:
+    """Yield jaxprs hiding inside an eqn param value: ClosedJaxpr, raw
+    Jaxpr, or containers of either (cond branches are tuples)."""
+    inner = getattr(value, "jaxpr", None)
+    if inner is not None:
+        yield inner
+        return
+    if getattr(value, "eqns", None) is not None:     # raw Jaxpr
+        yield value
+        return
+    if isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _nested_jaxprs(v)
+
+
+def walk_eqns(jaxpr) -> Iterator[Any]:
+    """Every equation in ``jaxpr``, recursing into nested sub-jaxprs
+    (pjit/scan/while bodies, cond branches, custom_jvp rules...)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for inner in _nested_jaxprs(v):
+                yield from walk_eqns(inner)
+
+
+def _elems(shape: Sequence[int]) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def lint_jaxpr(jaxpr, *, max_intermediate_elems: Optional[int] = None,
+               banned_leading_shapes: Sequence[Tuple[int, ...]] = (),
+               forbid_host_callbacks: bool = True) -> List[LintFinding]:
+    """Walk a (closed or raw) jaxpr and report lint findings."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    banned = {tuple(int(x) for x in s) for s in banned_leading_shapes}
+    out: List[LintFinding] = []
+    for eqn in walk_eqns(jaxpr):
+        prim = eqn.primitive.name
+        if forbid_host_callbacks and prim in HOST_CALLBACK_PRIMITIVES:
+            out.append(LintFinding(
+                "host-callback",
+                f"{prim} in jitted hot path (device->host sync)",
+                primitive=prim))
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            shape = tuple(getattr(aval, "shape", ()) or ())
+            if banned and any(shape[:len(b)] == b for b in banned if b):
+                out.append(LintFinding(
+                    "banned-shape",
+                    f"{prim} materializes banned shape {shape}",
+                    primitive=prim, shape=shape))
+            elif max_intermediate_elems is not None and \
+                    _elems(shape) > max_intermediate_elems:
+                out.append(LintFinding(
+                    "materialized-intermediate",
+                    f"{prim} materializes {_elems(shape)} elements "
+                    f"{shape} > budget {max_intermediate_elems}",
+                    primitive=prim, shape=shape))
+    return out
+
+
+def lint_fn(fn, *args, max_intermediate_elems: Optional[int] = None,
+            banned_leading_shapes: Sequence[Tuple[int, ...]] = (),
+            forbid_host_callbacks: bool = True, **kwargs
+            ) -> List[LintFinding]:
+    """Trace ``fn`` on example ``args`` and lint the resulting jaxpr.
+    Works on plain functions and jit-wrapped ones alike."""
+    import jax
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    return lint_jaxpr(closed,
+                      max_intermediate_elems=max_intermediate_elems,
+                      banned_leading_shapes=banned_leading_shapes,
+                      forbid_host_callbacks=forbid_host_callbacks)
+
+
+# ---------------------------------------------------------------------------
+# recompile accounting
+# ---------------------------------------------------------------------------
+
+def jit_cache_size(fn) -> int:
+    """Number of compiled entries in a ``jax.jit`` function's cache
+    (-1 when the object exposes no cache — e.g. a plain function)."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return -1
+    try:
+        return int(probe())
+    except Exception:
+        return -1
+
+
+@dataclass
+class RecompileGuard:
+    """Assert that a set of warmed jitted functions take ZERO new cache
+    entries across a code region::
+
+        guard = RecompileGuard({"gate": gate_fn})
+        ... replay already-warmed shape buckets ...
+        guard.assert_no_recompiles()
+
+    ``misses()`` returns the per-name delta for reporting."""
+    fns: Dict[str, Any]
+    _baseline: Dict[str, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._baseline = {name: jit_cache_size(fn)
+                          for name, fn in self.fns.items()}
+
+    def misses(self) -> Dict[str, int]:
+        return {name: jit_cache_size(fn) - self._baseline[name]
+                for name, fn in self.fns.items()}
+
+    def assert_no_recompiles(self):
+        bad = {n: d for n, d in self.misses().items() if d > 0}
+        assert not bad, f"unexpected jit recompiles: {bad}"

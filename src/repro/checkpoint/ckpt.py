@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import os
 import shutil
-import tempfile
 from typing import Any, Dict, Optional
 
 import jax

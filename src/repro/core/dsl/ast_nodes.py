@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 
 @dataclass
@@ -92,16 +92,27 @@ class GlobalDecl:
 
 @dataclass
 class Diagnostic:
-    level: int                      # 1 error, 2 warning, 3 constraint
+    level: int          # 1 error, 2 warning, 3 constraint, 4 semantic (L4)
     message: str
     line: int = 0
     col: int = 0
     quickfix: Optional[str] = None
+    # Level-4 payload: verifier findings carry a concrete witness signal
+    # assignment ({"type:name": bool, ...}) and a fatal flag — fatal
+    # findings reject a policy in lint-strict compile/hot-reload/CI.
+    witness: Optional[Dict[str, bool]] = None
+    fatal: bool = False
 
     def __str__(self):
-        lvl = {1: "ERROR", 2: "WARNING", 3: "CONSTRAINT"}[self.level]
+        lvl = {1: "ERROR", 2: "WARNING", 3: "CONSTRAINT",
+               4: "L4-FATAL" if self.fatal else "L4"}[self.level]
         qf = f"  (did you mean {self.quickfix!r}?)" if self.quickfix else ""
-        return f"[{lvl}] {self.line}:{self.col} {self.message}{qf}"
+        wit = ""
+        if self.witness is not None:
+            bits = ", ".join(f"{k}={int(v)}"
+                             for k, v in sorted(self.witness.items()))
+            wit = f"  witness: {{{bits}}}"
+        return f"[{lvl}] {self.line}:{self.col} {self.message}{qf}{wit}"
 
 
 @dataclass

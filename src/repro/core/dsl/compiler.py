@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, Dict
 
 from repro.core.decision import RuleNode, and_, leaf, not_, or_
 from repro.core.dsl.ast_nodes import (BoolAnd, BoolExpr, BoolNot, BoolOr,

@@ -3,7 +3,7 @@ Helm values.  PyYAML-free: a small spec-subset emitter is included."""
 
 from __future__ import annotations
 
-from dataclasses import asdict, is_dataclass
+from dataclasses import asdict
 from typing import Any
 
 from repro.core.decision import RuleNode

@@ -14,11 +14,9 @@ Cost model (Equation 27): E[cost] = C_sent + p_factual*(C_det + k*C_nli).
 from __future__ import annotations
 
 import re
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
-import numpy as np
 
 from repro.classifiers.backend import ClassifierBackend
 from repro.core import textstats as TS

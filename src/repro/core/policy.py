@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import os
 import threading
-import time
 from typing import Callable, Dict, List, Optional
 
 from repro.core.observability import METRICS
@@ -51,13 +50,17 @@ class PolicyRegistry:
 
     def __init__(self, default: RouterProgram,
                  on_register: Optional[Callable[[RouterProgram], None]]
-                 = None):
+                 = None, lint: str = "strict"):
         self._lock = threading.Lock()
         self.default_name = default.name
         self._programs: Dict[str, RouterProgram] = {default.name: default}
         # hook for the owning router: preload signal reference embeddings,
         # merge model profiles into the shared selection context, ...
         self._on_register = on_register
+        # Level-4 lint mode applied on every reload: "strict" rejects
+        # policies with fatal verifier findings (the old program keeps
+        # serving), "warn" attaches findings only, "off" skips the pass
+        self.lint = lint
 
     # -- reads ---------------------------------------------------------
     def names(self) -> List[str]:
@@ -97,7 +100,7 @@ class PolicyRegistry:
             old = self._programs.get(name)
         version = old.version + 1 if old is not None else 1
         program = compile_router_program(dsl_text, name=name,
-                                         version=version)
+                                         version=version, lint=self.lint)
         return self.register(program)
 
 

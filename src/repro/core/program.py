@@ -108,6 +108,10 @@ class RouterProgram:
                 self.slo_classes.setdefault(d.slo.cls, d.slo)
         self.overload = config.overload
         self.has_slo = bool(self.slo_classes) or self.overload is not None
+        # Level-4 verifier findings (filled by compile_router_program when
+        # lint != "off"); informational on the program object — rejection
+        # happens at compile time, never on a live program
+        self.lint_findings: List[Any] = []
 
     # ------------------------------------------------------------------
     def request_slo(self, req: Request) -> SLOSpec:
@@ -200,12 +204,22 @@ class DecisionPlan:
 
 
 def compile_router_program(source: Union[str, RouterConfig],
-                           name: str = "default", version: int = 1
-                           ) -> RouterProgram:
+                           name: str = "default", version: int = 1,
+                           lint: str = "warn") -> RouterProgram:
     """DSL text or an already-compiled RouterConfig -> RouterProgram.
     DSL input is validated lint-strict: Level-1 (syntax) AND Level-2
     (unresolved references) diagnostics raise, so a broken policy can
-    never reach the registry swap — the old program keeps serving."""
+    never reach the registry swap — the old program keeps serving.
+
+    ``lint`` controls the Level-4 semantic pass (BDD policy verifier):
+
+    * ``"strict"`` — fatal L4 findings (unsatisfiable/shadowed decisions,
+      dangling model references) ALSO raise, unless the source carries
+      the ``# vsr-lint: demo`` pragma;
+    * ``"warn"`` (default) — findings are computed and attached to the
+      program as ``lint_findings`` but never reject it;
+    * ``"off"`` — skip the verifier entirely.
+    """
     if isinstance(source, str):
         from repro.core.dsl import compile_source
         cfg, diags = compile_source(source, strict=True)
@@ -215,4 +229,16 @@ def compile_router_program(source: Union[str, RouterConfig],
                              "\n".join(str(d) for d in bad))
     else:
         cfg = source
-    return RouterProgram(cfg, name=name, version=version)
+    findings = []
+    if lint != "off":
+        from repro.analysis.policy_verify import (is_demo_source,
+                                                  verify_config)
+        findings = verify_config(cfg)
+        fatal = [d for d in findings if d.fatal]
+        if lint == "strict" and fatal and not (
+                isinstance(source, str) and is_demo_source(source)):
+            raise ValueError("policy verification failed (L4):\n" +
+                             "\n".join(str(d) for d in fatal))
+    program = RouterProgram(cfg, name=name, version=version)
+    program.lint_findings = findings
+    return program

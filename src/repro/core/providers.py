@@ -13,11 +13,10 @@ from __future__ import annotations
 import hashlib
 import itertools
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.observability import METRICS
-from repro.core.types import Endpoint, Message, Request, Response
+from repro.core.types import Endpoint, Request, Response
 
 
 # ---------------------------------------------------------------------------

@@ -10,7 +10,7 @@ awareness: RRF scores bypass cosine-calibrated thresholds (§13.2).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Tuple
 
 import numpy as np
 

@@ -381,6 +381,41 @@ def _svm_many(E_q, zs, cands, ctx, cfg):
     return out
 
 
+def _mlp_fwd(p, x):
+    import jax
+    for w, b in p[:-1]:
+        x = jax.nn.relu(x @ w + b)
+    w, b = p[-1]
+    return x @ w + b
+
+
+_mlp_step = None
+
+
+def _mlp_train_step():
+    """ONE module-level jitted train step, (params, X, y, qw, lr) ->
+    params.  Hoisted out of :func:`_mlp_many` so repeated ``select_many``
+    calls with the same record-shape bucket reuse the jit cache — the old
+    per-call ``jax.jit(value_and_grad(loss))`` closure recompiled the
+    whole 60-step loop's step on EVERY batch (engine-lint finding)."""
+    global _mlp_step
+    if _mlp_step is None:
+        import jax
+        import jax.numpy as jnp
+
+        def loss(p, X, y, qw):
+            ll = jax.nn.log_softmax(_mlp_fwd(p, X))
+            return -(qw * jnp.take_along_axis(ll, y[:, None], 1)[:, 0]
+                     ).mean()
+
+        def step(p, X, y, qw, lr):
+            _, g = jax.value_and_grad(loss)(p, X, y, qw)
+            return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+        _mlp_step = jax.jit(step)
+    return _mlp_step
+
+
 def _mlp_many(E_q, zs, cands, ctx, cfg):
     """The 60-step JAX training loop runs ONCE per batch (it only sees
     the records); inference is one batched forward over all B queries."""
@@ -401,25 +436,13 @@ def _mlp_many(E_q, zs, cands, ctx, cfg):
     params = [(jax.random.normal(ks[i], (dims[i], dims[i + 1])) * 0.1,
                jnp.zeros(dims[i + 1])) for i in range(3)]
 
-    def fwd(p, x):
-        for w, b in p[:-1]:
-            x = jax.nn.relu(x @ w + b)
-        w, b = p[-1]
-        return x @ w + b
-
-    def loss(p):
-        logits = fwd(p, X)
-        ll = jax.nn.log_softmax(logits)
-        return -(qw * jnp.take_along_axis(ll, y[:, None], 1)[:, 0]).mean()
-
-    lr = 0.05
-    val_grad = jax.jit(jax.value_and_grad(loss))
+    step = _mlp_train_step()
+    lr = jnp.float32(cfg.get("lr", 0.05))
     for _ in range(cfg.get("steps", 60)):
-        _, g = val_grad(params)
-        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        params = step(params, X, y, qw, lr)
     F = jnp.asarray(np.stack([_features(E_q[i], zs[i])
                               for i in range(len(E_q))]))
-    probs = np.asarray(jax.nn.softmax(fwd(params, F)))
+    probs = np.asarray(jax.nn.softmax(_mlp_fwd(params, F)))
     out = []
     for row in probs:
         i = int(np.argmax(row))

@@ -8,7 +8,6 @@ per round: equal | weighted | first_only.
 
 from __future__ import annotations
 
-import string
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence

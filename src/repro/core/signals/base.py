@@ -32,8 +32,8 @@ from repro.classifiers.backend import ClassifierBackend, get_backend
 from repro.core.signals.heuristic import HEURISTIC_EVALUATORS
 from repro.core.signals.learned import LearnedSignals
 from repro.core.signals.plan import SignalPlan
-from repro.core.types import (HEURISTIC_TYPES, Request, SignalKey,
-                              SignalMatch, SignalResult)
+from repro.core.types import (HEURISTIC_TYPES, Request, SignalMatch,
+                              SignalResult)
 
 # Extensibility (§3.5): operators register domain-specific signal types here;
 # the decision engine references them by (type, name) with no engine changes.

@@ -10,7 +10,6 @@ as `--grad-compression int8` in the launcher.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -6,7 +6,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.multi_lora.multi_lora import multi_lora_pallas
 

@@ -11,7 +11,6 @@ Usage:
 """
 
 import argparse
-import functools
 import json
 import time
 import traceback
@@ -22,7 +21,6 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES, applicable, cells
 from repro.launch.mesh import make_production_mesh
-from repro.models import model as MD
 from repro.models.config import model_flops
 from repro.roofline.analysis import Roofline, summarize
 from repro.roofline.hlo_cost import analyze as hlo_analyze

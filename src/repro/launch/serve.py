@@ -10,7 +10,6 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.core.decision import and_, leaf, not_
 from repro.core.dsl import compile_source
 from repro.core.router import SemanticRouter
 from repro.core.types import Message, Request
@@ -220,6 +219,14 @@ def main(argv=None):
                     help="checkpoint directory for trained signal "
                          "adapters, keyed by (task, tokenizer, dims); "
                          "warm restarts load instead of re-training")
+    ap.add_argument("--lint", choices=["strict", "warn", "off"],
+                    default="strict",
+                    help="Level-4 policy verifier mode: 'strict' rejects "
+                         "policies with fatal findings (unsatisfiable/"
+                         "shadowed decisions, dangling references) at "
+                         "startup and on hot-reload, 'warn' prints "
+                         "findings but serves anyway, 'off' skips the "
+                         "pass")
     args = ap.parse_args(argv)
 
     lanes = tuple(l.strip() for l in args.lanes.split(",") if l.strip())
@@ -228,6 +235,17 @@ def main(argv=None):
                                  lanes=lanes, model_axis=args.model_axis,
                                  train_adapters=args.train_adapters,
                                  adapter_cache=args.adapter_cache)
+    router.policies.lint = args.lint
+    if args.lint != "off":
+        # verify the built-in default policy too (strict: refuse to serve
+        # a config the verifier can prove broken)
+        from repro.analysis.policy_verify import verify_config
+        findings = verify_config(router.policies.get().config)
+        for d in findings:
+            print(f"lint: {d}")
+        if args.lint == "strict" and any(d.fatal for d in findings):
+            raise SystemExit("default policy failed L4 verification "
+                             "(--lint warn to serve anyway)")
     watcher = None
     policy_names = []
     if args.policy_dir:

@@ -12,12 +12,10 @@ complete checkpoint (the restart path the 1000-node deployment uses).
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config, get_reduced

@@ -22,7 +22,7 @@ FFN kinds: "dense" (SwiGLU), "moe" (top-k routed + optional shared experts),
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 MIXERS = ("attn", "bidir_attn", "cross_attn", "mla", "mamba", "mlstm", "slstm")

@@ -17,7 +17,6 @@ current length (scalar int32, shared across the batch).
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional, Tuple
 

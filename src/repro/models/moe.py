@@ -18,9 +18,8 @@ experts, DeepSeek-style).  Aux losses: load-balance + router z-loss.
 
 from __future__ import annotations
 
-import functools
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

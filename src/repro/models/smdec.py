@@ -19,7 +19,6 @@ as kernels/flash_decode, distributed over the mesh).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

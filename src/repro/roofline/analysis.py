@@ -14,7 +14,7 @@ Terms (seconds), per the assignment:
 from __future__ import annotations
 
 from dataclasses import dataclass, asdict
-from typing import Dict, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip

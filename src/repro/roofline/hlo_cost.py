@@ -503,7 +503,6 @@ def top_contributors(text: str, n: int = 25):
     items_flops = []
 
     # re-run analyze's traversal but recording per-instruction items
-    import io
     mult = _multipliers(comps, entry)
     fusion_called = mult["fusion_called"]
     reduce_called = mult["reduce_called"]

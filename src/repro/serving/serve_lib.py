@@ -8,7 +8,6 @@ never leave the device mesh.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

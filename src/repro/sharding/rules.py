@@ -17,7 +17,6 @@ from __future__ import annotations
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.config import ModelConfig

@@ -1,0 +1,424 @@
+"""repro.analysis policy-verifier tests: ROBDD engine units, the
+hypothesis brute-force equivalence sweep, the Level-4 finding catalog,
+CLI exit codes, and lint-mode enforcement at compile + hot-reload."""
+
+import itertools
+import time
+
+import pytest
+
+from repro.analysis import (BDD, at_most_one, derive_mutex_groups,
+                            rule_to_bdd, verify_config)
+from repro.analysis.__main__ import main as analysis_main
+from repro.core.decision import (_eval_assignment, and_, coverage_analysis,
+                                 leaf, leaf_keys, not_, or_, subsumes)
+from repro.core.policy import PolicyRegistry
+from repro.core.program import compile_router_program
+from repro.core.types import (Decision, Endpoint, ModelProfile, ModelRef,
+                              OverloadPolicy, RouterConfig, SLOSpec)
+
+L = lambda i: leaf("keyword", f"s{i}")          # noqa: E731
+K = lambda i: f"keyword:s{i}"                   # noqa: E731
+
+
+def _bdd_for(rules, n_vars):
+    keys = [K(i) for i in range(n_vars)]
+    bdd = BDD(n_vars)
+    idx = {k: i for i, k in enumerate(keys)}
+    return bdd, [rule_to_bdd(bdd, r, idx) for r in rules], keys
+
+
+def _brute_sat(rule, keys):
+    n = 0
+    for bits in itertools.product([False, True], repeat=len(keys)):
+        n += _eval_assignment(rule, dict(zip(keys, bits)))
+    return n
+
+
+# ---------------------------------------------------------------------------
+# ROBDD engine
+# ---------------------------------------------------------------------------
+
+def test_bdd_canonical_hash_consing():
+    bdd = BDD(3)
+    f = bdd.and_(bdd.var(0), bdd.var(1))
+    g = bdd.and_(bdd.var(1), bdd.var(0))       # commuted: same function
+    assert f == g                              # ... SAME node
+    assert bdd.not_(bdd.not_(f)) == f
+    assert bdd.or_(f, bdd.not_(f)) == bdd.TRUE
+    assert bdd.and_(f, bdd.not_(f)) == bdd.FALSE
+
+
+def test_bdd_sat_count_and_witness():
+    bdd = BDD(4)
+    assert bdd.sat_count(bdd.TRUE) == 16
+    assert bdd.sat_count(bdd.FALSE) == 0
+    assert bdd.sat_count(bdd.var(2)) == 8
+    f = bdd.or_(bdd.and_(bdd.var(0), bdd.var(1)), bdd.var(3))
+    # brute force: (x0&x1)|x3 has 4 + 8 - 2 = 10 models over 4 vars
+    assert bdd.sat_count(f) == 10
+    w = bdd.any_sat(f)
+    assert w is not None
+    # completing don't-cares with False must still satisfy
+    full = {i: w.get(i, False) for i in range(4)}
+    assert (full[0] and full[1]) or full[3]
+    assert bdd.any_sat(bdd.FALSE) is None
+
+
+def test_bdd_sat_iter_enumerates_paths():
+    bdd = BDD(3)
+    f = bdd.or_(bdd.var(0), bdd.var(1))
+    sols = list(bdd.sat_iter(f, limit=8))
+    assert sols
+    for s in sols:
+        full = {i: s.get(i, False) for i in range(3)}
+        assert full[0] or full[1]
+
+
+def test_at_most_one_counts():
+    bdd = BDD(5)
+    amo = at_most_one(bdd, [0, 2, 4])
+    # none-or-one of 3 vars (4 ways) x 2 free vars (4 ways)
+    assert bdd.sat_count(amo) == 16
+    # pairwise violation excluded
+    both = bdd.and_(bdd.var(0), bdd.var(2))
+    assert bdd.and_(amo, both) == bdd.FALSE
+
+
+def test_rule_to_bdd_runtime_semantics():
+    # an undeclared leaf folds to constant FALSE; NOT of it is TRUE
+    bdd = BDD(1)
+    idx = {K(0): 0}
+    ghost = leaf("keyword", "ghost")
+    assert rule_to_bdd(bdd, ghost, idx) == bdd.FALSE
+    assert rule_to_bdd(bdd, not_(ghost), idx) == bdd.TRUE
+    f = rule_to_bdd(bdd, or_(ghost, L(0)), idx)
+    assert f == bdd.var(0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: BDD verdicts == brute-force _eval_assignment
+# ---------------------------------------------------------------------------
+
+N_VARS = 10
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # property sweep skips cleanly
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    def _trees():
+        leaves = st.integers(0, N_VARS - 1).map(L)
+        return st.recursive(
+            leaves,
+            lambda kids: st.one_of(
+                st.lists(kids, min_size=2, max_size=3).map(
+                    lambda c: and_(*c)),
+                st.lists(kids, min_size=2, max_size=3).map(
+                    lambda c: or_(*c)),
+                kids.map(not_)),
+            max_leaves=12)
+
+    @settings(max_examples=30, deadline=None)
+    @given(rule=_trees())
+    def test_bdd_equals_bruteforce_satcount(rule):
+        keys = [K(i) for i in range(N_VARS)]
+        bdd, (f,), _ = _bdd_for([rule], N_VARS)
+        assert bdd.sat_count(f) == _brute_sat(rule, keys)
+        w = bdd.any_sat(f)
+        if w is None:
+            assert bdd.sat_count(f) == 0
+        else:
+            full = {k: w.get(i, False) for i, k in enumerate(keys)}
+            assert _eval_assignment(rule, full)
+
+    @settings(max_examples=30, deadline=None)
+    @given(a=_trees(), b=_trees())
+    def test_bdd_subsumption_equals_bruteforce(a, b):
+        keys = sorted({str(k) for k in leaf_keys(a) + leaf_keys(b)})
+        brute = all(
+            (not _eval_assignment(a, dict(zip(keys, bits))))
+            or _eval_assignment(b, dict(zip(keys, bits)))
+            for bits in itertools.product([False, True], repeat=len(keys)))
+        assert subsumes(a, b) == brute
+
+    @settings(max_examples=20, deadline=None)
+    @given(a=_trees(), b=_trees())
+    def test_bdd_overlap_witness_is_real(a, b):
+        bdd, (fa, fb), keys = _bdd_for([a, b], N_VARS)
+        o = bdd.and_(fa, fb)
+        if o != bdd.FALSE:
+            w = bdd.any_sat(o)
+            full = {k: w.get(i, False) for i, k in enumerate(keys)}
+            assert _eval_assignment(a, full) and _eval_assignment(b, full)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_bdd_equals_bruteforce_satcount():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# decision.py rewrites keep their contract (and lose the caps)
+# ---------------------------------------------------------------------------
+
+def test_coverage_analysis_wide_policy_no_cap():
+    # 24 vars: the old truth-table version raised ValueError here
+    ds = [Decision(f"d{i}", L(i), [ModelRef("m")], priority=1)
+          for i in range(24)]
+    cov = coverage_analysis(ds)
+    assert cov["n_vars"] == 24
+    assert cov["dead_zones"] == 1              # only the all-False corner
+    assert cov["dead_examples"] and not any(
+        v for v in cov["dead_examples"][0].values())
+
+
+def test_subsumes_wide_no_silent_false():
+    # 20 vars: the old version silently returned False above its cap
+    wide_a = and_(*[L(i) for i in range(20)])
+    wide_b = or_(*[L(i) for i in range(20)])
+    assert subsumes(wide_a, wide_b)
+    assert not subsumes(wide_b, wide_a)
+
+
+def test_coverage_mutex_hint_removes_impossible_dead_zones():
+    a, b = leaf("modality", "img"), leaf("modality", "aud")
+    ds = [Decision("ia", a, [ModelRef("m1")]),
+          Decision("au", b, [ModelRef("m2")])]
+    free = coverage_analysis(ds)
+    hinted = coverage_analysis(
+        ds, mutex_groups=[["modality:img", "modality:aud"]])
+    # unconstrained: 00 dead; constrained: img&aud impossible, still 00
+    assert free["dead_zones"] == 1
+    assert hinted["dead_zones"] == 1
+    # but a decision REQUIRING both is unsat only under the hint
+    both = Decision("both", and_(a, b), [ModelRef("m3")])
+    free2 = coverage_analysis(ds + [both])
+    hinted2 = coverage_analysis(
+        ds + [both], mutex_groups=[["modality:img", "modality:aud"]])
+    assert free2["dead_zones"] == 1
+    assert hinted2["dead_zones"] == 1
+    diags = verify_config(RouterConfig(decisions=ds + [both]),
+                          mutex_groups=[["modality:img", "modality:aud"]])
+    assert any("mutually-exclusive" in d.message for d in diags)
+
+
+# ---------------------------------------------------------------------------
+# Level-4 finding catalog over direct RouterConfigs
+# ---------------------------------------------------------------------------
+
+def _fatal(diags):
+    return [d for d in diags if d.fatal]
+
+
+def test_verify_unsat_decision():
+    cfg = RouterConfig(decisions=[
+        Decision("p", and_(L(0), not_(L(0))), [ModelRef("m")])])
+    diags = verify_config(cfg)
+    assert any("unsatisfiable" in d.message for d in _fatal(diags))
+
+
+def test_verify_shadowed_decision_with_witness():
+    cfg = RouterConfig(decisions=[
+        Decision("broad", L(0), [ModelRef("m1")], priority=10),
+        Decision("narrow", and_(L(0), L(1)), [ModelRef("m2")], priority=5)])
+    diags = verify_config(cfg)
+    shadow = [d for d in diags if "shadowed" in d.message]
+    assert shadow and shadow[0].fatal
+    w = shadow[0].witness
+    assert w is not None
+    full = {K(0): w.get(K(0), False), K(1): w.get(K(1), False)}
+    assert full[K(0)] and full[K(1)]           # the witness fires 'narrow'
+
+
+def test_verify_same_priority_overlap_differing_pools():
+    cfg = RouterConfig(decisions=[
+        Decision("a", L(0), [ModelRef("m1")], priority=7),
+        Decision("b", or_(L(0), L(1)), [ModelRef("m2")], priority=7)])
+    diags = verify_config(cfg)
+    over = [d for d in diags if "overlap" in d.message]
+    assert over and not over[0].fatal and over[0].witness is not None
+    # identical pools: silent
+    cfg2 = RouterConfig(decisions=[
+        Decision("a", L(0), [ModelRef("m1")], priority=7),
+        Decision("b", or_(L(0), L(1)), [ModelRef("m1")], priority=7)])
+    assert not [d for d in verify_config(cfg2) if "overlap" in d.message]
+
+
+def test_verify_coverage_hole_and_default_backstop():
+    cfg = RouterConfig(decisions=[
+        Decision("a", L(0), [ModelRef("m")], priority=1)])
+    assert any("coverage hole" in d.message for d in verify_config(cfg))
+    cfg.default_model = "m"
+    assert not any("coverage hole" in d.message for d in verify_config(cfg))
+
+
+def test_verify_reference_integrity():
+    cfg = RouterConfig(
+        decisions=[Decision("a", L(0), [ModelRef("ghost")], priority=1)],
+        model_profiles={"real": ModelProfile("real")},
+        default_model="real")
+    # profiles alone are selection metadata, not an exhaustive registry:
+    # the unknown model is reported but NOT fatal (the fleet can serve
+    # an unprofiled arch by name)
+    diags = verify_config(cfg)
+    ghost = [d for d in diags if "ghost" in d.message]
+    assert ghost and not any(d.fatal for d in ghost)
+    # declared endpoints ARE topology: now the dangling ref is fatal
+    cfg.endpoints = [Endpoint("e", "vllm", models=["real"])]
+    assert any("ghost" in d.message for d in _fatal(verify_config(cfg)))
+    # an endpoint serving the model (or serving everything) heals it
+    cfg.endpoints = [Endpoint("e", "vllm", models=[])]
+    assert not _fatal(verify_config(cfg))
+
+
+def test_verify_slo_graph():
+    cfg = RouterConfig(
+        decisions=[
+            Decision("a", L(0), [ModelRef("m1")], priority=1,
+                     slo=SLOSpec(cls="gold", priority=10,
+                                 degrade_to="ghost"))],
+        model_profiles={"m1": ModelProfile("m1")},
+        endpoints=[Endpoint("e", "vllm", models=["m1"])],
+        default_model="m1")
+    diags = verify_config(cfg)
+    assert any("dangling degrade edge" in d.message for d in _fatal(diags))
+
+    cfg2 = RouterConfig(
+        decisions=[
+            Decision("a", L(0), [ModelRef("m1")], priority=1,
+                     slo=SLOSpec(cls="gold", priority=10, degrade_to="m2")),
+            Decision("b", L(1), [ModelRef("m2")], priority=1,
+                     slo=SLOSpec(cls="silver", priority=5,
+                                 degrade_to="m1"))],
+        default_model="m1",
+        overload=OverloadPolicy(shed_below=100))
+    diags2 = verify_config(cfg2)
+    assert any("cycle" in d.message for d in diags2)
+    assert any("shed_below" in d.message for d in diags2)
+
+
+def test_verify_plugin_chain_sanity():
+    cfg = RouterConfig(decisions=[
+        Decision("a", L(0), [ModelRef("m")], priority=1,
+                 plugins={"cache_write": {}})],
+        default_model="m")
+    assert any("cache_write" in d.message for d in verify_config(cfg))
+
+
+def test_derive_mutex_groups_from_one_hot_heads():
+    cfg = RouterConfig(signals={
+        "modality": {"img": {"modalities": ["diffusion"]},
+                     "aud": {"modalities": ["audio"]},
+                     "img2": {"modalities": ["diffusion", "both"]}},
+        "keyword": {"u": {"keywords": ["urgent"]}}})
+    groups = derive_mutex_groups(cfg)
+    # img2 shares 'diffusion' with img: greedy grouping keeps the
+    # pairwise-disjoint prefix only
+    assert ["modality:aud", "modality:img"] in [sorted(g) for g in groups]
+
+
+# ---------------------------------------------------------------------------
+# scale: a 32-signal synthetic policy verifies fast
+# ---------------------------------------------------------------------------
+
+def test_wide_synthetic_policy_under_one_second():
+    n = 32
+    ds = []
+    for i in range(40):
+        r = and_(L(i % n), not_(L((i * 7 + 3) % n)))
+        ds.append(Decision(f"d{i}", r, [ModelRef(f"m{i % 3}")],
+                           priority=i % 5))
+    cfg = RouterConfig(decisions=ds, default_model="m0")
+    t0 = time.perf_counter()
+    diags = verify_config(cfg)
+    dt = time.perf_counter() - t0
+    assert dt < 1.0, f"verifier took {dt:.2f}s on 32 signals"
+    assert isinstance(diags, list)
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes, witnesses, demo exemption
+# ---------------------------------------------------------------------------
+
+CLEAN_DSL = """
+SIGNAL keyword urgent { keywords: ["urgent"] }
+ROUTE u { PRIORITY 10 WHEN keyword("urgent") MODEL "m" }
+GLOBAL { default_model: "m" }
+"""
+
+SHADOWED_DSL = """
+SIGNAL keyword a { keywords: ["a"] }
+SIGNAL keyword b { keywords: ["b"] }
+ROUTE broad { PRIORITY 10 WHEN keyword("a") MODEL "m1" }
+ROUTE narrow { PRIORITY 5 WHEN keyword("a") AND keyword("b") MODEL "m2" }
+GLOBAL { default_model: "m1" }
+"""
+
+
+def test_cli_strict_exit_codes(tmp_path, capsys):
+    good = tmp_path / "good.vsr"
+    good.write_text(CLEAN_DSL)
+    assert analysis_main([str(good), "--strict"]) == 0
+
+    bad = tmp_path / "bad.vsr"
+    bad.write_text(SHADOWED_DSL)
+    rc = analysis_main([str(bad), "--strict"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "shadowed" in out and "witness" in out
+    # non-strict: findings print, exit stays 0
+    assert analysis_main([str(bad)]) == 0
+
+
+def test_cli_demo_pragma_exempts_strict(tmp_path, capsys):
+    demo = tmp_path / "demo.vsr"
+    demo.write_text("# vsr-lint: demo\n" + SHADOWED_DSL)
+    assert analysis_main([str(demo), "--strict"]) == 0
+    out = capsys.readouterr().out
+    assert "shadowed" in out and "DEMO" in out
+    assert analysis_main([str(demo), "--strict",
+                          "--no-demo-exempt"]) == 1
+
+
+def test_shipped_policies_pass_strict_gate():
+    assert analysis_main(["examples/policies", "--strict"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# enforcement: compile + hot-reload lint modes
+# ---------------------------------------------------------------------------
+
+def test_compile_lint_modes():
+    with pytest.raises(ValueError, match="L4"):
+        compile_router_program(SHADOWED_DSL, lint="strict")
+    prog = compile_router_program(SHADOWED_DSL, lint="warn")
+    assert any(d.fatal for d in prog.lint_findings)
+    prog_off = compile_router_program(SHADOWED_DSL, lint="off")
+    assert prog_off.lint_findings == []
+    # demo pragma: strict compiles, findings attached
+    demo = compile_router_program("# vsr-lint: demo\n" + SHADOWED_DSL,
+                                  lint="strict")
+    assert any(d.fatal for d in demo.lint_findings)
+
+
+def test_hot_reload_strict_rejects_without_disturbing_snapshot():
+    default = compile_router_program(CLEAN_DSL, name="t")
+    registered = []
+    reg = PolicyRegistry(default, on_register=registered.append)
+    assert reg.lint == "strict"
+    snapshot = reg.get("t")
+    with pytest.raises(ValueError, match="L4"):
+        reg.reload("t", SHADOWED_DSL)
+    # the serving snapshot is untouched and register() never ran
+    assert reg.get("t") is snapshot
+    assert registered == []
+
+    # warn mode: accepted, swapped, findings ride the program
+    reg.lint = "warn"
+    prog2 = reg.reload("t", SHADOWED_DSL)
+    assert reg.get("t") is prog2
+    assert prog2.version == snapshot.version + 1
+    assert any(d.fatal for d in prog2.lint_findings)
+    assert registered == [prog2]

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, get_reduced, list_archs
-from repro.configs.shapes import SHAPES, applicable
+from repro.configs.shapes import applicable
 from repro.models import model as MD
 from repro.models.config import param_count
 

@@ -9,11 +9,9 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.decision import and_, leaf, not_, or_
 from repro.core.dsl import (compile_source, decompile, emit_crd, emit_helm,
-                            emit_yaml, parse, validate)
-from repro.core.dsl.compiler import compile_program
+                            emit_yaml, parse)
 from repro.core.dsl.emit import config_to_dict
-from repro.core.types import Decision, Endpoint, ModelProfile, ModelRef, \
-    RouterConfig
+from repro.core.types import Decision, Endpoint, ModelRef, RouterConfig
 
 GOLDEN = '''
 SIGNAL domain math { mmlu_categories: ["math"] }

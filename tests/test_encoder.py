@@ -4,7 +4,6 @@ training, LoRA memory accounting (Table 8), PII token path, NLI pairs."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.classifiers import tokenizer as TOK
 from repro.classifiers.encoder import (EncoderBackend, EncoderConfig,
@@ -126,7 +125,7 @@ def test_embeddings_and_matryoshka():
 
 
 def test_early_exit_layers():
-    from repro.classifiers.encoder import encoder_forward, mean_pool
+    from repro.classifiers.encoder import encoder_forward
     ids, lens = TOK.encode_batch(TEXTS, CFG.max_len)
     h1 = encoder_forward(CFG, PARAMS, jnp.asarray(ids), jnp.asarray(lens),
                          early_exit=1)

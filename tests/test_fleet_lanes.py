@@ -9,7 +9,6 @@ import sys
 import threading
 import time
 
-import numpy as np
 import pytest
 
 ARCH_TEXT = "smollm-360m"

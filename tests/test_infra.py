@@ -8,10 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from types import SimpleNamespace
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from repro.configs import get_config, get_reduced, list_archs
+from repro.configs import get_config, list_archs
 from repro.data.pipeline import TokenStream
 from repro.models import model as MD
 from repro.roofline.analysis import Roofline

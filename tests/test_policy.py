@@ -10,12 +10,11 @@ import time
 import pytest
 
 from repro.core.decision import leaf
-from repro.core.policy import (PolicyRegistry, PolicyWatcher,
-                               load_policy_dir, request_policy_name)
-from repro.core.program import RouterProgram
+from repro.core.policy import (PolicyWatcher, load_policy_dir,
+                               request_policy_name)
 from repro.core.router import SemanticRouter
-from repro.core.types import (Decision, Endpoint, Message, ModelProfile,
-                              ModelRef, Request, RouterConfig)
+from repro.core.types import (Decision, Endpoint, Message, ModelRef, Request,
+                              RouterConfig)
 
 
 def req(text, **kw):

@@ -6,7 +6,6 @@ the modality-routed three-lane ``route_batch`` e2e scenario."""
 
 import time
 
-import pytest
 
 from repro.core.providers import EndpointRouter
 from repro.core.types import Endpoint, Message, Request

@@ -1,8 +1,7 @@
 """End-to-end routing profiles (paper Table 10) + providers/auth."""
 
-import pytest
 
-from repro.core.decision import and_, leaf, not_, or_
+from repro.core.decision import leaf, or_
 from repro.core.providers import AuthFactory, EndpointRouter, \
     from_provider_payload, to_provider_payload
 from repro.core.router import SemanticRouter

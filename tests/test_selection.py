@@ -2,11 +2,9 @@
 properties (escalation, exploration, latency sensitivity, learning)."""
 
 import numpy as np
-import pytest
 
 from repro.classifiers.backend import HashBackend
-from repro.core.selection import ALGORITHMS, ReMoM, SelectionContext, \
-    get_algorithm
+from repro.core.selection import ALGORITHMS, ReMoM, SelectionContext
 from repro.core.selection.algorithms import RoutingRecord
 from repro.core.types import ModelProfile
 

@@ -380,7 +380,7 @@ def test_header_mutation():
 
 def test_plugin_chain_order_and_short_circuit():
     calls = []
-    from repro.core.plugins.base import register_plugin, _REGISTRY
+    from repro.core.plugins.base import register_plugin
     register_plugin("rag", lambda r, c, f: (calls.append("rag") or r, None))
     try:
         chain = PluginChain(
