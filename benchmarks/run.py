@@ -1,13 +1,18 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only t4,...]
+  PYTHONPATH=src python -m benchmarks.run [--only t4,...] [--json-out F]
 
 ``--only`` accepts suite keys or benchmark module names
-(``t_prefix_cache`` resolves to ``prefix``, etc.).
+(``t_prefix_cache`` resolves to ``prefix``, etc.).  ``--json-out``
+additionally writes every executed suite's rows to one JSON file
+(``{suite: [{name, us_per_call, derived}, ...]}``) — the machine-readable
+convention shared with the standalone ``BENCH_*.json`` reports, so CI
+uploads a single artifact covering both.
 """
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -17,6 +22,7 @@ ALIASES = {
     "t_prefix_cache": "prefix",
     "t_slo_burst": "slo",
     "t_disagg_decode": "disagg",
+    "t_spec_decode": "spec",
 }
 
 
@@ -38,6 +44,12 @@ def _slo_rows():
 def _disagg_rows():
     from benchmarks import t_disagg_decode
     return t_disagg_decode.rows(t_disagg_decode.run(long_n=3))
+
+
+def _spec_rows():
+    from benchmarks import t_spec_decode
+    return t_spec_decode.rows(
+        t_spec_decode.run(n=4, gen=24, ks=(4,), distill_steps=300))
 
 
 def get_suites():
@@ -67,12 +79,15 @@ def get_suites():
         "prefix": _prefix_rows,
         "slo": _slo_rows,
         "disagg": _disagg_rows,
+        "spec": _spec_rows,
     }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json-out", default="",
+                    help="also write executed suites' rows to this JSON file")
     args = ap.parse_args()
 
     suites = get_suites()
@@ -85,15 +100,23 @@ def main() -> None:
                      f"known: {sorted(suites) + sorted(ALIASES)}")
     print("name,us_per_call,derived")
     failures = 0
+    report = {}
     for key, fn in suites.items():
         if only and key not in only:
             continue
         try:
-            for name, us, derived in fn():
+            rows = list(fn())
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}")
+            report[key] = [{"name": name, "us_per_call": round(us, 1),
+                            "derived": derived}
+                           for name, us, derived in rows]
         except Exception:
             failures += 1
             traceback.print_exc()
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(report, f, indent=2)
     if failures:
         sys.exit(1)
 

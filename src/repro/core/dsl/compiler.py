@@ -10,7 +10,8 @@ from repro.core.dsl.ast_nodes import (BoolAnd, BoolExpr, BoolNot, BoolOr,
 from repro.core.dsl.parser import parse
 from repro.core.dsl.validate import validate
 from repro.core.types import (Decision, Endpoint, ModelProfile, ModelRef,
-                              OverloadPolicy, RouterConfig, SLOSpec)
+                              OverloadPolicy, RouterConfig, SLOSpec,
+                              SpecPolicy)
 
 
 def _slo_spec(d: Dict[str, Any]) -> SLOSpec:
@@ -103,6 +104,13 @@ def compile_program(prog: Program) -> RouterConfig:
                 shed_below=int(ov.get("shed_below", 100)),
                 retry_after_s=float(ov.get("retry_after_s", 1.0)),
                 default_class=str(ov.get("default_class", "")))
+        sp = g.get("speculative")
+        if isinstance(sp, dict):
+            cfg.speculative = SpecPolicy(
+                draft_model=str(sp.get("draft_model", "")),
+                k=int(sp.get("k", 4)),
+                adaptive=bool(sp.get("adaptive", True)),
+                probe_every=int(sp.get("probe_every", 16)))
         for mname, prof in g.get("model_profiles", {}).items():
             if isinstance(prof, dict):
                 cfg.model_profiles[mname] = ModelProfile(

@@ -161,6 +161,18 @@ def decompile(cfg: RouterConfig) -> str:
         if p.default_class:
             ov["default_class"] = p.default_class
         g["overload"] = ov
+    if cfg.speculative is not None:
+        sp: Dict[str, Any] = {}
+        s = cfg.speculative
+        if s.draft_model:
+            sp["draft_model"] = s.draft_model
+        if s.k != 4:
+            sp["k"] = s.k
+        if not s.adaptive:
+            sp["adaptive"] = False
+        if s.probe_every != 16:
+            sp["probe_every"] = s.probe_every
+        g["speculative"] = sp
     if cfg.model_profiles:
         g["model_profiles"] = {
             m: {"cost_per_mtok": p.cost_per_mtok, "quality": p.quality,

@@ -22,6 +22,7 @@ KNOWN_BACKENDS = ("vllm", "openai", "anthropic", "azure", "bedrock",
 SLO_KEYS = ("class", "priority", "ttft_ms", "degrade_to")
 OVERLOAD_KEYS = ("queue_depth", "slot_occupancy", "free_block_frac",
                  "ttft_ms", "shed_below", "retry_after_s", "default_class")
+SPECULATIVE_KEYS = ("draft_model", "k", "adaptive", "probe_every")
 
 
 def _refs(expr):
@@ -139,6 +140,26 @@ def validate(prog: Program) -> List[Diagnostic]:
                 if v is not None and not (0.0 <= float(v) <= 1.0):
                     out.append(Diagnostic(
                         3, f"GLOBAL overload: {frac_key} {v} outside [0, 1]",
+                        prog.global_.pos.line, prog.global_.pos.col))
+        sp = prog.global_.config.get("speculative")
+        if isinstance(sp, dict):
+            for key in sp:
+                if key not in SPECULATIVE_KEYS:
+                    sugg = difflib.get_close_matches(key, SPECULATIVE_KEYS,
+                                                     n=1)
+                    out.append(Diagnostic(
+                        3, f"GLOBAL speculative: unknown key {key!r}",
+                        prog.global_.pos.line, prog.global_.pos.col,
+                        quickfix=sugg[0] if sugg else None))
+            if not str(sp.get("draft_model", "")):
+                out.append(Diagnostic(
+                    3, "GLOBAL speculative: draft_model is required",
+                    prog.global_.pos.line, prog.global_.pos.col))
+            for int_key in ("k", "probe_every"):
+                v = sp.get(int_key)
+                if v is not None and int(v) < 1:
+                    out.append(Diagnostic(
+                        3, f"GLOBAL speculative: {int_key} {v} must be >= 1",
                         prog.global_.pos.line, prog.global_.pos.col))
     return out
 

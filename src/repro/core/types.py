@@ -188,6 +188,23 @@ class OverloadPolicy:
     default_class: str = ""
 
 
+@dataclass
+class SpecPolicy:
+    """GLOBAL ``speculative: { ... }``: draft-model speculative decoding
+    on the serving text lanes.
+
+    ``draft_model`` names the (small) fleet arch that proposes ``k``
+    tokens per round; each lane's own member verifies all k+1 positions
+    in one wide forward and greedy acceptance keeps output token-exact
+    vs plain decode.  ``adaptive`` backs a lane off to plain decode when
+    the acceptance EWMA collapses; ``probe_every`` is the full-k re-probe
+    cadence for backed-off lanes."""
+    draft_model: str = ""
+    k: int = 4
+    adaptive: bool = True
+    probe_every: int = 16
+
+
 class RouterOverloadError(RuntimeError):
     """Typed admission rejection: the router is overloaded and this
     request was shed (never dispatched).  ``retry_after_s`` is the
@@ -234,6 +251,9 @@ class RouterConfig:
     # QoS: overload detection thresholds + admission rules; None keeps
     # the pre-SLO behaviour (FIFO, no shedding, no preemption)
     overload: Optional[OverloadPolicy] = None
+    # speculative decoding: draft model + verify width for the serving
+    # text lanes; None keeps plain per-token decode
+    speculative: Optional[SpecPolicy] = None
 
     def used_signal_types(self) -> set:
         from repro.core.decision import leaf_keys

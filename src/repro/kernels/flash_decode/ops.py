@@ -202,6 +202,120 @@ def paged_flash_decode(q, kpool, vpool, tbl, kv_len, *,
 
 
 # ---------------------------------------------------------------------------
+# block-table GQA verify kernel (speculative decoding)
+# ---------------------------------------------------------------------------
+
+def _paged_verify_kernel(tbl_ref, lens_ref,
+                         q_ref, k_ref, v_ref,
+                         o_ref,
+                         s_scr, v_scr,
+                         *, scale: float, blk: int, grid_k: int, hkv: int,
+                         w: int, gp: int):
+    """The decode kernel's Sq=G tile widened to W positions: the W*Gp
+    q rows of one (row, KV-head) program share every streamed block, and
+    each position t masks its own causal frontier ``kv_len - W + t + 1``
+    — the exact column set a plain decode step at depth pos+t sees, so
+    per-position outputs are bitwise-identical to ``paged_flash_decode``
+    (masked columns underflow to exact 0 probability; value columns a
+    narrower decode never stashed multiply by that exact 0)."""
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+    b = bh // hkv
+
+    @pl.when(ki == 0)
+    def _init():
+        s_scr[...] = jnp.full_like(s_scr, NEG_INF)
+        v_scr[...] = jnp.zeros_like(v_scr)
+
+    kvl = lens_ref[b]
+
+    @pl.when(ki * blk < kvl)
+    def _stash():
+        q = q_ref[0].astype(jnp.float32)            # (W*Gp, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (blk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        rows = jax.lax.broadcasted_iota(jnp.int32, (w * gp, blk), 0)
+        cols = ki * blk + jax.lax.broadcasted_iota(jnp.int32, (w * gp, blk), 1)
+        limit = kvl - w + rows // gp + 1            # position t = row // gp
+        s = jnp.where(cols < limit, s, NEG_INF)
+        pl.store(s_scr, (slice(None), pl.dslice(ki * blk, blk)), s)
+        pl.store(v_scr, (pl.dslice(ki * blk, blk), slice(None)),
+                 v_ref[0, :, 0, :].astype(jnp.float32))
+
+    @pl.when(ki == grid_k - 1)
+    def _finish():
+        probs = jax.nn.softmax(s_scr[...], axis=-1)
+        probs = probs.astype(v_ref.dtype).astype(jnp.float32)
+        o_ref[0] = jax.lax.dot_general(
+            probs, v_scr[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_verify(q, kpool, vpool, tbl, kv_len, *,
+                       interpret: bool = True):
+    """Speculative-verify attention over the paged pool, no gather.
+
+    q: (B, W, Hq, hd) — W = 1 + k draft positions per row, whose KV the
+    caller has already written at ``kv_len - W .. kv_len - 1``;
+    kpool/vpool: (num_blocks, block_tokens, Hkv, hd); tbl: (B,
+    max_blocks) int32; kv_len: (B,) int32 TOTAL length including the W
+    new entries.  Returns (B, W, Hq, hd).  Blocks stream HBM->VMEM once
+    per (row, KV head) exactly like ``paged_flash_decode`` — W rides in
+    the q tile, not the grid, so speculation adds zero extra KV traffic.
+    """
+    B, W, Hq, hd = q.shape
+    blk, Hkv = kpool.shape[1], kpool.shape[2]
+    max_blocks = tbl.shape[1]
+    G = Hq // Hkv
+    Gp = max(8, G)
+
+    qf = q.reshape(B, W, Hkv, G, hd).transpose(0, 2, 1, 3, 4)
+    if Gp != G:
+        qf = jnp.pad(qf, ((0, 0), (0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    qf = qf.reshape(B * Hkv, W * Gp, hd)
+
+    kernel = functools.partial(_paged_verify_kernel, scale=1.0 / math.sqrt(hd),
+                               blk=blk, grid_k=max_blocks, hkv=Hkv,
+                               w=W, gp=Gp)
+
+    def q_map(bh, ki, tbl_ref, lens_ref):
+        return (bh, 0, 0)
+
+    def kv_map(bh, ki, tbl_ref, lens_ref):
+        b = bh // Hkv
+        return (tbl_ref[b, _live_block(lens_ref, b, ki, blk)], 0,
+                bh % Hkv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * Hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, W * Gp, hd), q_map),
+            pl.BlockSpec((1, blk, 1, hd), kv_map),
+            pl.BlockSpec((1, blk, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, W * Gp, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((W * Gp, max_blocks * blk), jnp.float32),
+            pltpu.VMEM((max_blocks * blk, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, W * Gp, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tbl.astype(jnp.int32), kv_len.astype(jnp.int32), qf, kpool, vpool)
+    out = out.reshape(B, Hkv, W, Gp, hd)[:, :, :, :G]
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, W, Hq, hd)
+
+
+# ---------------------------------------------------------------------------
 # block-table MLA (absorbed-latent) decode kernel
 # ---------------------------------------------------------------------------
 
@@ -305,3 +419,112 @@ def paged_flash_decode_mla(q_lat, q_rope, ckv_pool, krope_pool, tbl, kv_len,
     )(tbl.astype(jnp.int32), kv_len.astype(jnp.int32), ql, qr,
       ckv_pool, krope_pool)
     return ctx[:, :H, :]
+
+
+# ---------------------------------------------------------------------------
+# block-table MLA verify kernel (speculative decoding)
+# ---------------------------------------------------------------------------
+
+def _paged_mla_verify_kernel(tbl_ref, lens_ref,
+                             ql_ref, qr_ref, ckv_ref, kr_ref,
+                             o_ref,
+                             s_scr, ckv_scr,
+                             *, scale: float, blk: int, grid_k: int,
+                             w: int, hp: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        s_scr[...] = jnp.full_like(s_scr, NEG_INF)
+        ckv_scr[...] = jnp.zeros_like(ckv_scr)
+
+    kvl = lens_ref[b]
+
+    @pl.when(ki * blk < kvl)
+    def _stash():
+        ql = ql_ref[0].astype(jnp.float32)          # (W*Hp, r)
+        qr = qr_ref[0].astype(jnp.float32)          # (W*Hp, rh)
+        ckv = ckv_ref[0].astype(jnp.float32)        # (blk, r)
+        kr = kr_ref[0].astype(jnp.float32)          # (blk, rh)
+        s = jax.lax.dot_general(ql, ckv, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s += jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        s *= scale                                   # (W*Hp, blk)
+
+        rows = jax.lax.broadcasted_iota(jnp.int32, (w * hp, blk), 0)
+        cols = ki * blk + jax.lax.broadcasted_iota(jnp.int32, (w * hp, blk), 1)
+        limit = kvl - w + rows // hp + 1            # per-position frontier
+        s = jnp.where(cols < limit, s, NEG_INF)
+        pl.store(s_scr, (slice(None), pl.dslice(ki * blk, blk)), s)
+        pl.store(ckv_scr, (pl.dslice(ki * blk, blk), slice(None)), ckv)
+
+    @pl.when(ki == grid_k - 1)
+    def _finish():
+        probs = jax.nn.softmax(s_scr[...], axis=-1)
+        probs = probs.astype(ckv_ref.dtype).astype(jnp.float32)
+        o_ref[0] = jax.lax.dot_general(
+            probs, ckv_scr[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_flash_verify_mla(q_lat, q_rope, ckv_pool, krope_pool, tbl, kv_len,
+                           *, scale: float, interpret: bool = True):
+    """Absorbed-latent MLA speculative verify over the paged pool.
+
+    q_lat: (B, W, H, r); q_rope: (B, W, H, rh); pools/tbl as in
+    ``paged_flash_decode_mla``; kv_len: (B,) TOTAL length including the
+    W freshly written latents.  Returns the latent context (B, W, H, r).
+    Each position t masks to its own frontier ``kv_len - W + t + 1`` so
+    outputs match W successive absorbed decode steps bitwise; the W
+    positions share each streamed block (no extra HBM traffic).
+    """
+    B, W, H, r = q_lat.shape
+    rh = q_rope.shape[-1]
+    blk = ckv_pool.shape[1]
+    max_blocks = tbl.shape[1]
+    Hp = max(8, H)
+
+    ql, qr = q_lat, q_rope
+    if Hp != H:
+        ql = jnp.pad(ql, ((0, 0), (0, 0), (0, Hp - H), (0, 0)))
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, Hp - H), (0, 0)))
+    ql = ql.reshape(B, W * Hp, r)
+    qr = qr.reshape(B, W * Hp, rh)
+
+    kernel = functools.partial(_paged_mla_verify_kernel, scale=scale, blk=blk,
+                               grid_k=max_blocks, w=W, hp=Hp)
+
+    def q_map(b, ki, tbl_ref, lens_ref):
+        return (b, 0, 0)
+
+    def kv_map(b, ki, tbl_ref, lens_ref):
+        return (tbl_ref[b, _live_block(lens_ref, b, ki, blk)], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, W * Hp, r), q_map),
+            pl.BlockSpec((1, W * Hp, rh), q_map),
+            pl.BlockSpec((1, blk, r), kv_map),
+            pl.BlockSpec((1, blk, rh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, W * Hp, r), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((W * Hp, max_blocks * blk), jnp.float32),
+            pltpu.VMEM((max_blocks * blk, r), jnp.float32),
+        ],
+    )
+    ctx = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, W * Hp, r), q_lat.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tbl.astype(jnp.int32), kv_len.astype(jnp.int32), ql, qr,
+      ckv_pool, krope_pool)
+    return ctx.reshape(B, W, Hp, r)[:, :, :H, :]

@@ -161,8 +161,19 @@ def build_router(reduced: bool = True, gen_tokens: int = 8,
         print("signal adapters: " +
               ", ".join(f"{t}={v}" for t, v in sorted(report.items())))
     archs = sorted({p.arch for p in cfg.model_profiles.values() if p.arch})
+    spec = None
+    if cfg.speculative is not None and cfg.speculative.draft_model:
+        # GLOBAL speculative: resolve the draft model name through the
+        # profiles (it may name either a profile or a fleet arch directly)
+        from repro.serving.scheduler import SpecConfig
+        sp = cfg.speculative
+        prof = cfg.model_profiles.get(sp.draft_model)
+        draft_arch = prof.arch if prof is not None and prof.arch \
+            else sp.draft_model
+        spec = SpecConfig(draft_arch=draft_arch, k=sp.k,
+                          adaptive=sp.adaptive, probe_every=sp.probe_every)
     fleet = LocalFleet(archs, reduced=reduced, gen_tokens=gen_tokens,
-                       model_axis=model_axis)
+                       model_axis=model_axis, speculative=spec)
     m2a = {m: p.arch for m, p in cfg.model_profiles.items() if p.arch}
     router = SemanticRouter(cfg, call_fn=fleet.call_fn(m2a))
     # QoS: admission control samples engine load through this detector;

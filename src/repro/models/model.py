@@ -302,6 +302,23 @@ def _self_attn(cfg, p, h, rope, mode, bcache, pos, bidir=False, tbl=None,
                 bcache["v"], v.astype(bcache["v"].dtype), (0, pos, 0, 0)),
         }
         return h + L.attn_out(p["attn"], out), new_cache
+    if mode == "verify":
+        # speculative verify (paged only): W tokens per row at positions
+        # pos..pos+W-1 are written, then attended exactly like W successive
+        # decode steps — position t's mask set (ik <= pos+t) equals the
+        # decode step's kv_len=pos+t+1 set, so every position's output is
+        # bitwise-identical to the non-speculative decode path's.
+        W = q.shape[1]
+        kpool = _paged_write(bcache["k"], k, tbl, pos)
+        vpool = _paged_write(bcache["v"], v, tbl, pos)
+        if cfg.decode_impl == "flash_paged":
+            from repro.kernels.flash_decode.ops import paged_flash_verify
+            out = paged_flash_verify(q, kpool, vpool, tbl, pos + W)
+        else:
+            out = L.sdpa(q, _paged_view(kpool, tbl), _paged_view(vpool, tbl),
+                         causal=True, q_offset=pos, kv_len=pos + W,
+                         sliding_window=0)
+        return h + L.attn_out(p["attn"], out), {"k": kpool, "v": vpool}
     # decode (pos: scalar, or (B,) per-row positions for continuous batching)
     if tbl is not None:
         kpool = _paged_write(bcache["k"], k, tbl, pos)
@@ -383,6 +400,29 @@ def _mla_attn(cfg, p, h, rope, mode, bcache, pos, tbl=None,
         }
         out = _mla_naive(cfg, mp, q_nope, q_rope, c_kv, k_rope)
         return h + out, new_cache
+    if mode == "verify":
+        # speculative verify (paged only): the W positions use the SAME
+        # absorbed program as decode (NOT _mla_naive — its reassociated
+        # latent matmul flips greedy argmax on near-ties), so position t
+        # is bitwise-identical to a decode step at kv_len = pos + t + 1.
+        W = q_nope.shape[1]
+        ckv_p = _paged_write(bcache["ckv"], c_kv, tbl, pos)
+        krope_p = _paged_write(bcache["krope"], k_rope, tbl, pos)
+        if cfg.decode_impl == "flash_paged":
+            from repro.kernels.flash_decode.ops import paged_flash_verify_mla
+            B, Sq, H, _ = q_nope.shape
+            q_lat = jnp.einsum("bqhn,hrn->bqhr", q_nope, mp["wk_b"])
+            ctx = paged_flash_verify_mla(
+                q_lat, q_rope, ckv_p, krope_p, tbl, pos + W,
+                scale=1.0 / math.sqrt(cfg.nope_head_dim + cfg.rope_head_dim))
+            out = jnp.einsum("bqhr,hrv->bqhv", ctx, mp["wv_b"])
+            out = out.reshape(B, Sq, H * cfg.v_head_dim) @ mp["wo"]
+        else:
+            out = L.mla_attention(mp, cfg, q_nope, q_rope,
+                                  _paged_view(ckv_p, tbl),
+                                  _paged_view(krope_p, tbl),
+                                  causal=True, q_offset=pos, kv_len=pos + W)
+        return h + out, {"ckv": ckv_p, "krope": krope_p}
     # decode: absorbed latent attention against the compressed cache
     # (pos: scalar, or (B,) per-row positions for continuous batching)
     if tbl is not None:
@@ -656,6 +696,38 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: Array, cache: dict,
         new_cache["tbl"] = tbl
     logits = _logits(cfg, params, h)[:, 0, :]
     return logits, new_cache
+
+
+def verify(cfg: ModelConfig, params: dict, tokens: Array, cache: dict,
+           *, moe_impl: str = "gshard") -> Tuple[Array, dict]:
+    """Speculative-decoding verify: tokens (B,W) + paged cache ->
+    (logits (B,W,V), cache).
+
+    Feeds W tokens per row (the pending token followed by W-1 draft
+    proposals) at positions ``pos..pos+W-1``, writing all W KV entries
+    through the block table and returning logits at EVERY position.
+    Attention at position t masks to ``kv <= pos+t`` — the same set a
+    plain decode step sees at depth pos+t — and runs the same decode
+    program (absorbed MLA, 0 sliding window), so row t's logits are
+    bitwise-identical to the non-speculative path's.  KV written past
+    the accepted prefix is simply stale: it sits beyond the new ``pos``
+    and is overwritten before it can ever be attended to, so rollback
+    costs nothing.  ``pos``/``tbl`` are scheduler-owned and carried
+    through unchanged."""
+    pos = cache["pos"]
+    tbl = cache["tbl"]
+    W = tokens.shape[1]
+    h = params["embed"][tokens]
+    rope_dim = cfg.rope_head_dim if cfg.is_mla else cfg.head_dim
+    positions = pos[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+    rope = L.rope_tables(positions, rope_dim, cfg.rope_theta)
+    h, new_cache, _ = _run_groups(cfg, params, h, cfg.groups, "g", rope=rope,
+                                  cross_ctx=None, mode="verify", cache=cache,
+                                  pos=pos, moe_impl=moe_impl, remat=False,
+                                  tbl=tbl)
+    new_cache["pos"] = pos
+    new_cache["tbl"] = tbl
+    return _logits(cfg, params, h), new_cache
 
 
 def loss_fn(cfg: ModelConfig, params: dict, tokens: Array, labels: Array,

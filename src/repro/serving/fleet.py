@@ -46,29 +46,131 @@ import hashlib
 import threading
 import time
 from collections import OrderedDict, deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields as dc_fields
+from dataclasses import replace as dc_replace
 from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_reduced
+from repro.configs import get_config, get_reduced, list_archs
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as MD
 from repro.serving import serve_lib
 from repro.serving.paged import PoolStats
-from repro.serving.scheduler import PREFILL_BUCKETS, DecodeScheduler
+from repro.serving.scheduler import (PREFILL_BUCKETS, DecodeScheduler,
+                                     SpecConfig, SpecRuntime)
 from repro.sharding import rules as R
 from repro.sharding.ctx import sharding_rules
 
 SSM_MIXERS = ("mamba", "mlstm", "slstm")
+
+# decode attention paths a ModelConfig/LocalFleet may select; anything
+# else used to fall through to the XLA path silently deep in a lane step
+VALID_DECODE_IMPLS = ("xla", "flash_paged", "shardmap")
 
 # non-AR diffusion stub archs servable as image lanes (not ModelConfigs —
 # the denoiser is the lane itself)
 DIFFUSION_ARCHS: Dict[str, dict] = {
     "sd-tiny": dict(hw=8, steps=8),
 }
+
+
+def _validate_decode_impl(decode_impl: Optional[str]):
+    if decode_impl is not None and decode_impl not in VALID_DECODE_IMPLS:
+        raise ValueError(
+            f"unknown decode_impl {decode_impl!r}; valid: "
+            + ", ".join(VALID_DECODE_IMPLS))
+
+
+def _spec_draft_archs() -> List[str]:
+    """Archs usable as a speculative draft: AR text models the paged
+    cache supports (pure attention/MLA stacks)."""
+    out = []
+    for a in list_archs():
+        cfg = get_reduced(a)
+        if cfg.family != "audio" and MD.paged_supported(cfg):
+            out.append(a)
+    return out
+
+
+def _validate_speculative(spec: Optional[SpecConfig], *, paged: object):
+    if spec is None:
+        return
+    if not isinstance(spec, SpecConfig):
+        raise ValueError(
+            f"speculative= expects a SpecConfig, got {type(spec).__name__}")
+    if paged is False:
+        raise ValueError("speculative decoding requires the paged KV "
+                         "cache (paged='auto' or True)")
+    valid = _spec_draft_archs()
+    if spec.draft_arch not in valid:
+        raise ValueError(
+            f"unknown/unsupported speculative draft_arch "
+            f"{spec.draft_arch!r}; valid: " + ", ".join(sorted(valid)))
+    if spec.k < 1:
+        raise ValueError(f"speculative k must be >= 1, got {spec.k}")
+    if spec.probe_every < 1:
+        raise ValueError(
+            f"speculative probe_every must be >= 1, got {spec.probe_every}")
+    if not (0.0 < spec.alpha <= 1.0):
+        raise ValueError(
+            f"speculative alpha must be in (0, 1], got {spec.alpha}")
+    if not (0.0 <= spec.min_accept <= 1.0):
+        raise ValueError(
+            f"speculative min_accept must be in [0, 1], "
+            f"got {spec.min_accept}")
+
+
+def _validate_arch_overrides(overrides, archs: List[str]):
+    """``arch_overrides`` maps a fleet arch to ModelConfig field
+    overrides applied on top of its (reduced) registry config — plus the
+    synthetic ``depth_mult`` key, which multiplies every layer group's
+    ``repeats`` (benchmarks use it to open a real depth gap between a
+    target and its speculative draft).  Validated at construction so a
+    typo'd field fails with the arch named, not deep inside a lane
+    build."""
+    if overrides is None:
+        return
+    if not isinstance(overrides, dict):
+        raise ValueError(
+            f"arch_overrides expects a dict of arch -> field overrides, "
+            f"got {type(overrides).__name__}")
+    for arch, ov in overrides.items():
+        if arch not in archs:
+            raise ValueError(
+                f"arch_overrides names {arch!r} which is not a fleet "
+                f"member; fleet archs: " + ", ".join(archs))
+        if arch in DIFFUSION_ARCHS:
+            raise ValueError(
+                f"arch_overrides cannot target diffusion lane {arch!r} "
+                f"(no ModelConfig)")
+        if not isinstance(ov, dict):
+            raise ValueError(
+                f"arch_overrides[{arch!r}] expects a dict of ModelConfig "
+                f"fields, got {type(ov).__name__}")
+        known = {f.name for f in dc_fields(get_reduced(arch))}
+        for key in ov:
+            if key != "depth_mult" and key not in known:
+                raise ValueError(
+                    f"arch_overrides[{arch!r}]: unknown ModelConfig "
+                    f"field {key!r}")
+        if "depth_mult" in ov and int(ov["depth_mult"]) < 1:
+            raise ValueError(
+                f"arch_overrides[{arch!r}]: depth_mult must be >= 1, "
+                f"got {ov['depth_mult']}")
+
+
+def _apply_arch_overrides(cfg, ov: dict):
+    ov = dict(ov)
+    mult = int(ov.pop("depth_mult", 1) or 1)
+    if mult > 1:
+        cfg = cfg.replace(groups=tuple(
+            dc_replace(g, repeats=g.repeats * mult) for g in cfg.groups))
+    if ov:
+        cfg = cfg.replace(**ov)
+    return cfg
 
 
 def hash_tokens(text: str, vocab: int, max_len: int) -> np.ndarray:
@@ -124,6 +226,7 @@ class FleetMember(MemberStats):
     copy_block: object = None            # jitted COW block copy
     block_tokens: int = 16
     num_blocks: int = 0                  # physical blocks incl. trash block
+    spec: object = None                  # SpecRuntime (speculative decoding)
 
 
 @dataclass
@@ -267,6 +370,33 @@ class ARLane(BackendLane):
                 prev = w
             while self.pending:
                 self.step()
+        if getattr(sched, "drafter", None) is not None:
+            # the spec drains above compiled the wide verify, the fused
+            # draft scan, and the FRESH draft catch-up prefills; a lane
+            # that backs off accumulates draft lag and its probe rounds
+            # catch up through SUFFIX prefills at arbitrary width
+            # buckets — compile the whole ladder now against the trash
+            # block so no serving-time probe ever pays XLA compile
+            dw = sched.drafter
+            trow = jnp.zeros((1, sched.tbl.shape[1]), jnp.int32)
+            with sharding_rules(self.fleet.mesh,
+                                R.act_rules(self.fleet.mesh, m.batch)):
+                for fn, start in ((dw.rt.prefill_fresh, 0),
+                                  (dw.rt.prefill_suffix, m.block_tokens)):
+                    for w in widths:
+                        _, dw.cache = fn(
+                            dw.rt.params, jnp.zeros((1, w), jnp.int32),
+                            jnp.asarray([min(2, w)], np.int32),
+                            jnp.asarray([start], np.int32),
+                            trow, dw.cache)
+            # the adaptive fallback (plain decode when acceptance
+            # collapses) must compile now too, not on the first
+            # backed-off serving round
+            sched.spec_enabled = False
+            self._warmup_submit(4, fill=7)
+            while self.pending:
+                self.step()
+            sched.spec_enabled = True
         m.warmup_ms = (time.perf_counter() - t0) * 1e3
         # warmup traffic must not pollute serving stats
         m.tokens_out = m.prompts_in = 0
@@ -279,6 +409,11 @@ class ARLane(BackendLane):
         sched.prefill.prefills = 0
         if getattr(sched, "paged", False):
             sched.pool.stats = PoolStats()
+        if getattr(sched, "drafter", None) is not None:
+            sched.drafter.reset_stats()
+            sched.spec_rounds = sched.spec_offered = 0
+            sched.spec_accepted = sched.spec_emitted = 0
+            sched.spec_acceptance_ewma = 0.0
         sched._finished.clear()
 
     def _warmup_submit(self, width: int, fill: int = 4):
@@ -482,7 +617,9 @@ class LocalFleet:
                  prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = 1,
                  prefill_lookahead: int = 0,
-                 decode_impl: Optional[str] = None):
+                 decode_impl: Optional[str] = None,
+                 speculative: Optional[SpecConfig] = None,
+                 arch_overrides: Optional[Dict[str, dict]] = None):
         """``paged`` selects the KV layout per member: "auto" (default)
         pages every arch the paged cache supports (pure attention/MLA
         stacks — SSM and cross-attention members stay contiguous), True
@@ -498,7 +635,21 @@ class LocalFleet:
         admit-everything cadence), ``prefill_lookahead`` lets the prefill
         worker run that many admissions ahead of free slots.
         ``decode_impl`` overrides the model's decode attention path
-        (e.g. "flash_paged" for the block-table Pallas decode kernel)."""
+        (e.g. "flash_paged" for the block-table Pallas decode kernel).
+
+        ``speculative`` enables draft-model speculative decoding on every
+        paged text lane: ``SpecConfig.draft_arch`` proposes ``k`` tokens
+        per round, the lane's member verifies all k+1 positions in one
+        wide forward, and greedy acceptance keeps output token-exact vs
+        the non-speculative path (see ``DecodeScheduler._decode_spec``).
+
+        ``arch_overrides`` maps member archs to ModelConfig field
+        overrides (plus ``depth_mult``, which multiplies layer-group
+        repeats) applied on top of the registry config before build —
+        the speculative-decoding benchmark deepens its target with it."""
+        _validate_decode_impl(decode_impl)
+        _validate_speculative(speculative, paged=paged)
+        _validate_arch_overrides(arch_overrides, list(archs))
         self.mesh = make_host_mesh(model=model_axis)
         self.model_axis = model_axis
         self.gen_tokens = gen_tokens
@@ -520,7 +671,8 @@ class LocalFleet:
         self._build = dict(reduced=reduced, batch=batch, max_seq=max_seq,
                            moe_impl=moe_impl, paged=paged,
                            block_tokens=block_tokens, kv_blocks=kv_blocks,
-                           decode_impl=decode_impl)
+                           decode_impl=decode_impl, speculative=speculative,
+                           arch_overrides=arch_overrides or {})
         self._sched_opts = dict(prefill_chunk=prefill_chunk,
                                 prefill_budget=prefill_budget,
                                 prefill_lookahead=prefill_lookahead)
@@ -541,6 +693,8 @@ class LocalFleet:
                                               **DIFFUSION_ARCHS[arch])
             return member, lane
         cfg = get_reduced(arch) if reduced else get_config(arch)
+        if b["arch_overrides"].get(arch):
+            cfg = _apply_arch_overrides(cfg, b["arch_overrides"][arch])
         if b["decode_impl"] is not None:
             cfg = cfg.replace(decode_impl=b["decode_impl"])
         if cfg.n_experts:
@@ -582,6 +736,12 @@ class LocalFleet:
             # 1 trash + a full table per slot + retained-prefix
             # headroom (~4 rows) for the cross-request hit rate
             nblk = kv_blocks or (1 + (batch + 4) * bpr)
+        spec_rt = None
+        if b["speculative"] is not None and use_paged \
+                and cfg.family != "audio":
+            spec_rt = self._build_spec_runtime(
+                b["speculative"], cfg, batch, max_seq, nblk, block_tokens,
+                moe_impl)
         member = FleetMember(arch, cfg, params, pre_row, dec, merge,
                              batch, max_seq,
                              prompt_cap=max_seq - self.gen_tokens - 1,
@@ -591,9 +751,55 @@ class LocalFleet:
                              prefill_paged_suffix=ps,
                              copy_block=cpb,
                              block_tokens=block_tokens,
-                             num_blocks=nblk)
+                             num_blocks=nblk,
+                             spec=spec_rt)
         lane_cls = AudioLane if cfg.family == "audio" else ARLane
         return member, lane_cls(self, member)
+
+    def _build_spec_runtime(self, spec: SpecConfig, target_cfg, batch: int,
+                            max_seq: int, num_blocks: int, block_tokens: int,
+                            moe_impl: str) -> SpecRuntime:
+        """Draft model + jitted speculative steps for one paged lane.
+
+        The draft initializes from the fleet's OWN key — the same key
+        every member's params come from — so a draft_arch that names
+        another fleet member proposes with byte-identical weights to
+        that member.  Its paged cache reuses the TARGET pool's geometry
+        (same slots/table/blocks), so the scheduler's one block table
+        indexes both pools and speculation adds zero BlockPool state.
+        The draft always decodes through the XLA path: its tokens only
+        seed proposals, so the cheapest dispatch wins and the target's
+        ``decode_impl`` choice stays independent."""
+        b = self._build
+        draft_cfg = (get_reduced(spec.draft_arch) if b["reduced"]
+                     else get_config(spec.draft_arch))
+        draft_cfg = draft_cfg.replace(decode_impl="xla")
+        if draft_cfg.n_experts:
+            # dropless, same as the serving members (see _build_lane)
+            draft_cfg = draft_cfg.replace(moe_capacity_factor=max(
+                draft_cfg.moe_capacity_factor,
+                draft_cfg.n_experts / max(1, draft_cfg.moe_top_k)))
+        if draft_cfg.vocab_size != target_cfg.vocab_size:
+            raise ValueError(
+                f"speculative draft_arch {spec.draft_arch!r} vocab "
+                f"({draft_cfg.vocab_size}) != target vocab "
+                f"({target_cfg.vocab_size})")
+        with sharding_rules(self.mesh, R.act_rules(self.mesh, batch)):
+            dsh = serve_lib.serve_shardings(draft_cfg, self.mesh, batch,
+                                            max_seq)
+            draft_params = jax.jit(
+                lambda k, c=draft_cfg: MD.init_params(c, k),
+                out_shardings=dsh["param_sharding"])(self._key)
+            steps = serve_lib.build_spec_steps(target_cfg, draft_cfg,
+                                               moe_impl=moe_impl)
+        init_cache = lambda slots, c=draft_cfg: MD.init_paged_cache(
+            c, slots, max_seq, num_blocks, block_tokens)
+        return SpecRuntime(cfg=draft_cfg, params=draft_params,
+                           verify=steps["verify"],
+                           draft_propose=steps["draft_propose"],
+                           prefill_fresh=steps["draft_prefill_fresh"],
+                           prefill_suffix=steps["draft_prefill_suffix"],
+                           init_cache_fn=init_cache, spec=spec)
 
     def add_member(self, arch: str, *, warmup: bool = True) -> bool:
         """Build, warm up, and register one member (the autoscaler's
@@ -647,7 +853,8 @@ class LocalFleet:
         return DecodeScheduler(
             m, gen_tokens=self.gen_tokens,
             init_cache_fn=init_cache,
-            make_cross_fn=make_cross, **self._sched_opts)
+            make_cross_fn=make_cross,
+            spec=getattr(m, "spec", None), **self._sched_opts)
 
     # -- generation ---------------------------------------------------------
 

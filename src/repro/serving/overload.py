@@ -45,6 +45,10 @@ class EngineLoad:
     free_blocks: int = 0
     total_blocks: int = 0
     ttft_ewma_ms: float = 0.0
+    # speculative decoding health: best-lane acceptance EWMA and accepted
+    # tokens per engine step (0.0 on both = no lane speculating)
+    spec_accept_ewma: float = 0.0
+    spec_tokens_per_step: float = 0.0
 
     @property
     def occupancy(self) -> float:
@@ -62,6 +66,10 @@ class EngineLoad:
         self.free_blocks += other.free_blocks
         self.total_blocks += other.total_blocks
         self.ttft_ewma_ms = max(self.ttft_ewma_ms, other.ttft_ewma_ms)
+        self.spec_accept_ewma = max(self.spec_accept_ewma,
+                                    other.spec_accept_ewma)
+        self.spec_tokens_per_step = max(self.spec_tokens_per_step,
+                                        other.spec_tokens_per_step)
 
 
 def fleet_probe(fleet) -> Callable[[], EngineLoad]:
@@ -87,6 +95,15 @@ def fleet_probe(fleet) -> Callable[[], EngineLoad]:
             ttft = getattr(sched, "ttft_probe_ms",
                            getattr(sched, "ttft_ewma", 0.0))
             load.ttft_ewma_ms = max(load.ttft_ewma_ms, ttft)
+            # speculating lanes report effective decode throughput (accepted
+            # tokens per engine step) so the TTFT/throughput grading sees
+            # spec gains/losses the raw step counters would hide
+            load.spec_accept_ewma = max(
+                load.spec_accept_ewma,
+                float(getattr(sched, "spec_acceptance_ewma", 0.0)))
+            load.spec_tokens_per_step = max(
+                load.spec_tokens_per_step,
+                float(getattr(sched, "spec_tokens_per_round", 0.0)))
         return load
     return probe
 
@@ -169,6 +186,11 @@ class OverloadDetector:
         METRICS.gauge("overload_state", _STATE_CODE[new])
         METRICS.gauge("overload_queue_depth", load.queue_depth)
         METRICS.gauge("overload_free_block_frac", round(load.free_frac, 4))
+        if load.spec_tokens_per_step:
+            METRICS.gauge("spec_accept_ewma",
+                          round(load.spec_accept_ewma, 4))
+            METRICS.gauge("spec_tokens_per_step",
+                          round(load.spec_tokens_per_step, 4))
         return new
 
 

@@ -49,6 +49,74 @@ def make_decode_fn(cfg: ModelConfig, *, moe_impl: str = "ep"):
     return serve_step
 
 
+def make_verify_fn(cfg: ModelConfig, *, moe_impl: str = "ep"):
+    """Speculative verify: W tokens per row (pending token + W-1 draft
+    proposals) through ONE wide forward over the paged cache.  Returns
+    the greedy token at EVERY position — ``out[:, t]`` is exactly what a
+    plain decode step at depth pos+t would have sampled."""
+    def verify_step(params, tokens, cache):
+        logits, cache = MD.verify(cfg, params, tokens, cache,
+                                  moe_impl=moe_impl)
+        return greedy(logits), cache
+    return verify_step
+
+
+def make_draft_propose_fn(cfg: ModelConfig, *, moe_impl: str = "ep"):
+    """Fused draft proposal loop: ``steps`` autoregressive draft-model
+    decode steps in ONE jitted ``lax.scan`` dispatch (per-step host
+    round-trips are the cost speculation exists to amortize).
+
+    ``buf`` (B, 2) holds the known-true tokens at draft depths
+    ``dpos``/``dpos+1`` and ``lag`` (B,) in {0, 1} is how far the draft
+    trails the target (``pos - dpos``): step 0 consumes ``buf[:, 0]``,
+    step 1 consumes ``buf[:, 1]`` for lagging rows (else its own step-0
+    argmax), later steps chain their own argmax.  Row b's W-1 proposals
+    for target positions ``pos+1..`` are the scan outputs shifted by its
+    lag.  The draft cache pos advances by ``steps`` inside the scan."""
+    def draft_propose(params, buf, lag, cache, *, steps: int):
+        def body(carry, j):
+            prev, c = carry
+            tok = jnp.where(j == 0, buf[:, 0],
+                            jnp.where((j == 1) & (lag == 1), buf[:, 1], prev))
+            logits, c = MD.decode_step(cfg, params, tok[:, None], c,
+                                       moe_impl=moe_impl)
+            nxt = greedy(logits)
+            return (nxt, c), nxt
+
+        (_, cache), outs = jax.lax.scan(
+            body, (buf[:, 0], cache), jnp.arange(steps, dtype=jnp.int32))
+        idx = (jnp.arange(steps - 1, dtype=jnp.int32)[None, :]
+               + lag[:, None])                       # (B, steps-1)
+        props = jnp.take_along_axis(outs.T, idx, axis=1)
+        return props, cache
+    return jax.jit(draft_propose, static_argnames=("steps",),
+                   donate_argnums=(3,))
+
+
+def build_spec_steps(target_cfg: ModelConfig, draft_cfg: ModelConfig, *,
+                     moe_impl: str = "ep"):
+    """Speculative-decoding step bundle for one text lane.
+
+    Returns a dict with the target-side ``verify`` (W-wide paged
+    forward, greedy tokens at all W positions) and the draft-side
+    ``draft_propose`` (fused k-step scan) plus the draft's own paged
+    admission prefills (``draft_prefill_fresh`` / ``draft_prefill_suffix``)
+    used for lazy draft-KV catch-up after admission, parks, and
+    backed-off rounds.  All caches are donated."""
+    verify = jax.jit(make_verify_fn(target_cfg, moe_impl=moe_impl),
+                     donate_argnums=(2,))
+    draft_propose = make_draft_propose_fn(draft_cfg, moe_impl=moe_impl)
+    draft_prefill_fresh = jax.jit(
+        make_prefill_paged_fn(draft_cfg, moe_impl=moe_impl, fresh=True),
+        donate_argnums=(5,))
+    draft_prefill_suffix = jax.jit(
+        make_prefill_paged_fn(draft_cfg, moe_impl=moe_impl, fresh=False),
+        donate_argnums=(5,))
+    return {"verify": verify, "draft_propose": draft_propose,
+            "draft_prefill_fresh": draft_prefill_fresh,
+            "draft_prefill_suffix": draft_prefill_suffix}
+
+
 def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int):
     params_shape = jax.eval_shape(
         functools.partial(MD.init_params, cfg), jax.random.PRNGKey(0))

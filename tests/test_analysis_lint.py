@@ -114,6 +114,35 @@ def test_paged_flash_decode_kernels_are_lint_clean():
     assert findings == [], [str(f) for f in findings]
 
 
+def test_paged_flash_verify_kernels_are_lint_clean():
+    """The speculative-verify kernels inherit the decode kernels'
+    contract: no gathered (B, max_blocks*block_tokens, ...) KV copy and
+    no host callbacks — W rides the q tile, not extra KV traffic."""
+    from repro.kernels.flash_decode.ops import (paged_flash_verify,
+                                                paged_flash_verify_mla)
+    B, nb, max_blocks, blk, Hq, Hkv, hd, W = 3, 10, 4, 16, 8, 2, 64, 5
+    S = max_blocks * blk
+    q = jnp.zeros((B, W, Hq, hd), jnp.float32)
+    kpool = jnp.zeros((nb, blk, Hkv, hd), jnp.float32)
+    vpool = jnp.zeros((nb, blk, Hkv, hd), jnp.float32)
+    tbl = jnp.zeros((B, max_blocks), jnp.int32)
+    kv_len = jnp.zeros((B,), jnp.int32)
+    findings = lint_fn(paged_flash_verify, q, kpool, vpool, tbl, kv_len,
+                       banned_leading_shapes=[(B, S), (B * 2, S)])
+    assert findings == [], [str(f) for f in findings]
+
+    r, rh = 64, 32
+    ql = jnp.zeros((B, W, Hq, r), jnp.float32)
+    qr = jnp.zeros((B, W, Hq, rh), jnp.float32)
+    ckv = jnp.zeros((nb, blk, r), jnp.float32)
+    kr = jnp.zeros((nb, blk, rh), jnp.float32)
+    findings = lint_fn(
+        paged_flash_verify_mla, ql, qr, ckv, kr, tbl, kv_len,
+        banned_leading_shapes=[(B, S), (B * 2, S)],
+        scale=1.0 / np.sqrt(96.0))
+    assert findings == [], [str(f) for f in findings]
+
+
 def test_lint_jaxpr_accepts_closed_and_raw():
     gate, match, conf = _gate_and_batch()
     closed = jax.make_jaxpr(gate)(match, conf)
@@ -164,6 +193,41 @@ def test_decision_gate_no_recompile_across_warm_buckets():
     for _ in range(3):                   # replay: zero new compiles
         gate(match, conf)
         gate(match8, conf8)
+    guard.assert_no_recompiles()
+
+
+def test_verify_kernels_no_recompile_across_warm_width_buckets():
+    """Replayed verify widths (the adaptive scheduler only issues
+    W in {1, k+1}) never miss the jit cache once warmed."""
+    from repro.kernels.flash_decode.ops import (paged_flash_verify,
+                                                paged_flash_verify_mla)
+    B, nb, max_blocks, blk, Hq, Hkv, hd = 2, 6, 2, 16, 8, 2, 64
+    kpool = jnp.zeros((nb, blk, Hkv, hd), jnp.float32)
+    vpool = jnp.zeros((nb, blk, Hkv, hd), jnp.float32)
+    ckv = jnp.zeros((nb, blk, 64), jnp.float32)
+    kr = jnp.zeros((nb, blk, 32), jnp.float32)
+    tbl = jnp.zeros((B, max_blocks), jnp.int32)
+    kv_len = jnp.full((B,), 8, jnp.int32)
+
+    def gqa(W):
+        return paged_flash_verify(jnp.zeros((B, W, Hq, hd), jnp.float32),
+                                  kpool, vpool, tbl, kv_len)
+
+    def mla(W):
+        return paged_flash_verify_mla(
+            jnp.zeros((B, W, Hq, 64), jnp.float32),
+            jnp.zeros((B, W, Hq, 32), jnp.float32),
+            ckv, kr, tbl, kv_len, scale=0.1)
+
+    for W in (1, 5):                     # warm both width buckets
+        gqa(W)
+        mla(W)
+    guard = RecompileGuard({"verify": paged_flash_verify,
+                            "verify_mla": paged_flash_verify_mla})
+    for _ in range(3):
+        for W in (1, 5):
+            gqa(W)
+            mla(W)
     guard.assert_no_recompiles()
 
 
